@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: timing, CSV emission, subprocess launch."""
+from __future__ import annotations
+
+import os
+import statistics
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+ART = ROOT / "benchmarks" / "artifacts"
+FAST = os.environ.get("BENCH_FAST", "1") == "1"   # default: CI-sized
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2):
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def run_with_devices(snippet: str, n_devices: int, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", snippet], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout

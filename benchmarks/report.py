@@ -1,0 +1,64 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts (idempotent: replaces text between AUTOGEN markers)."""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+ART = ROOT / "benchmarks" / "artifacts" / "dryrun"
+
+
+def dryrun_table(mesh: str, tag: str = "baseline") -> str:
+    rows = ["| arch | shape | kind | compile s | args GB/dev | temp GB/dev "
+            "| #coll ops | ICI GB/dev | DCN GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for f in sorted(ART.glob(f"*__{mesh}__{tag}.json")):
+        r = json.loads(f.read_text())
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | SKIPPED "
+                        f"({r['reason'][:40]}…) | | | | | |")
+            continue
+        c = r["collectives"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['timing']['compile_s']:.0f} "
+            f"| {r['memory']['argument_bytes'] / 1e9:.2f} "
+            f"| {r['memory']['temp_bytes'] / 1e9:.1f} "
+            f"| {c['n_collective_ops']} "
+            f"| {c['ici_traffic_bytes_per_device'] / 1e9:.2f} "
+            f"| {c['dcn_traffic_bytes_per_device'] / 1e9:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(tag: str = "baseline") -> str:
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.roofline import analyze, render_markdown
+    return render_markdown(analyze(tag))
+
+
+def splice(md_path: Path, marker: str, content: str):
+    text = md_path.read_text() if md_path.exists() else ""
+    begin = f"<!-- AUTOGEN:{marker} -->"
+    end = f"<!-- AUTOGEN:END:{marker} -->"
+    block = f"{begin}\n{content}\n{end}"
+    if begin in text:
+        text = re.sub(re.escape(begin) + r".*?" + re.escape(end), block,
+                      text, flags=re.S)
+    else:
+        text += "\n" + block + "\n"
+    md_path.write_text(text)
+
+
+def main():
+    md = ROOT / "EXPERIMENTS.md"
+    splice(md, "dryrun-single", dryrun_table("single"))
+    splice(md, "dryrun-multi", dryrun_table("multi"))
+    splice(md, "roofline", roofline_table())
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

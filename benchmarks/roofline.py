@@ -1,0 +1,110 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Per (arch x shape) on the single-pod mesh:
+  compute    = HLO_FLOPs / (chips * 197e12)            [s, per step]
+  memory     = HLO_bytes / (chips * 819e9)             [s]
+  collective = collective_bytes / (chips * 50e9)       [s]
+with HLO terms taken from the unroll-extrapolated analysis pass (exact layer
+counts; scan bodies are otherwise counted once by XLA cost analysis) and
+collective_bytes = per-device ring traffic * chips.
+
+All terms are already per-device quantities, so term = per_device_qty / rate.
+MODEL_FLOPS: 6*N*D (train), 2*N*D (prefill), 2*N*B (decode) with N_active for
+MoE; the ratio MODEL/HLO exposes remat + causal-mask + dispatch waste.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+DCN_BW = 6.25e9          # B/s / chip (multi-pod pod axis; 50 Gb/s assumption)
+
+
+def model_flops_per_device(rec: dict, shapes: dict) -> float:
+    kind = rec["kind"]
+    n_act = rec["model"]["active_params"]
+    gb, seq = shapes["global_batch"], shapes["seq_len"]
+    if kind == "train":
+        total = 6.0 * n_act * gb * seq
+    elif kind == "prefill":
+        total = 2.0 * n_act * gb * seq
+    else:  # decode: one token per sequence
+        total = 2.0 * n_act * gb
+    return total / rec["n_devices"]
+
+
+def analyze(tag: str = "baseline", mesh: str = "single"):
+    from repro.configs import SHAPES
+
+    rows = []
+    for f in sorted(ART.glob(f"*__{mesh}__{tag}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skipped": True, "reason": rec["reason"]})
+            continue
+        ana = rec.get("analysis")
+        if not ana:
+            continue
+        sh = SHAPES[rec["shape"]]
+        t_c = ana["flops"] / PEAK_FLOPS
+        t_m = ana["bytes"] / HBM_BW
+        t_x = ana["ici_traffic_bytes_per_device"] / ICI_BW
+        t_d = ana.get("dcn_traffic_bytes_per_device", 0.0) / DCN_BW
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x + t_d),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(rec, {"global_batch": sh.global_batch,
+                                          "seq_len": sh.seq_len})
+        bound = max(t_c, t_m, t_x + t_d)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "skipped": False,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x + t_d,
+            "dominant": dom,
+            "model_flops_per_dev": mf,
+            "hlo_flops_per_dev": ana["flops"],
+            "model_over_hlo": mf / max(ana["flops"], 1.0),
+            "roofline_fraction": t_c / max(bound, 1e-12),
+            "memory_temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+            "memory_args_gb": rec["memory"]["argument_bytes"] / 1e9,
+        })
+    return rows
+
+
+def render_markdown(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO | roofline frac | temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIPPED "
+                       f"| — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} "
+            f"| {r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} "
+            f"| {r['dominant']} | {r['model_over_hlo']:.3f} "
+            f"| {r['roofline_fraction']:.3f} | {r['memory_temp_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def run(tag: str = "baseline"):
+    rows = analyze(tag)
+    for r in rows:
+        if r.get("skipped"):
+            continue
+        from benchmarks.common import emit
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s']) * 1e6,
+             f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}")
+    (ART.parent / f"roofline_{tag}.json").write_text(json.dumps(rows, indent=1))
+    (ART.parent / f"roofline_{tag}.md").write_text(render_markdown(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "baseline")

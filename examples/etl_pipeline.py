@@ -1,0 +1,77 @@
+"""The paper's headline experiment as a runnable example: heterogeneous
+(shared-pool) vs batch (static-partition) execution of mixed join+sort
+pipelines on one resource pool — expect the heterogeneous policy to win
+(paper: 4-15%).
+
+Run with several host devices to see real interleaving:
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/etl_pipeline.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (BATCH, HETEROGENEOUS, LiveScheduler, PilotDescription,
+                        PilotManager, TaskDescription)
+from repro.dataframe import ops_dist as D
+
+ROWS = 20_000
+
+
+def sort_payload(comm):
+    rng = np.random.default_rng(1)
+    data = {"k": rng.integers(0, 1_000_000, ROWS).astype(np.int32)}
+    t = D.shard_table(comm, data, ROWS // comm.size * 2 + 64)
+    out, _ = D.make_dist_sort(comm.mesh, "k")(t)
+    jax.block_until_ready(out.columns["k"])
+    time.sleep(1.0)    # simulated residual work: this container has ONE core,
+                       # so cross-task parallelism is demonstrated via sleep
+    return "sorted"
+
+
+def join_payload(comm):
+    rng = np.random.default_rng(2)
+    cap = ROWS // comm.size * 2 + 64
+    a = D.shard_table(comm, {"k": rng.integers(0, 1_000_000, ROWS).astype(np.int32),
+                             "v": rng.normal(size=ROWS).astype(np.float32)}, cap)
+    b = D.shard_table(comm, {"k": rng.integers(0, 1_000_000, ROWS).astype(np.int32),
+                             "w": rng.normal(size=ROWS).astype(np.float32)}, cap)
+    out, _ = D.make_dist_join(comm.mesh, "k", out_factor=3.0)(a, b)
+    jax.block_until_ready(out.columns["k"])
+    time.sleep(3.0)    # joins are the long pole (see sort_payload note)
+    return "joined"
+
+
+def mix(n_dev):
+    per = max(n_dev // 2, 1)
+    descs = []
+    for i in range(2):
+        descs.append(TaskDescription(name=f"join{i}", ranks=per,
+                                     fn=join_payload, tags={"pipeline": "join"}))
+    for i in range(4):
+        descs.append(TaskDescription(name=f"sort{i}", ranks=per,
+                                     fn=sort_payload, tags={"pipeline": "sort"}))
+    return descs
+
+
+def main():
+    n = len(jax.devices())
+    results = {}
+    for policy in (HETEROGENEOUS, BATCH):
+        pm = PilotManager()
+        pilot = pm.submit_pilot(PilotDescription(n_devices=n))
+        sched = LiveScheduler(pilot.resource_manager, policy)
+        rep = sched.run(mix(n), timeout=900)
+        bad = [t for t in rep.tasks if t.state.value != "DONE"]
+        assert not bad, [(t.desc.name, t.error) for t in bad]
+        results[policy] = rep.makespan
+        print(f"[{policy:>13s}] makespan {rep.makespan:.2f}s  "
+              f"(comm-build total {rep.overhead_total * 1e3:.1f}ms)")
+    impr = (results[BATCH] - results[HETEROGENEOUS]) / results[BATCH] * 100
+    print(f"heterogeneous vs batch improvement: {impr:.1f}% "
+          f"(paper reports 4-15% at ORNL scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""The paper's primary contribution in JAX: a heterogeneous pilot runtime
+(RADICAL-Pilot/RAPTOR analogue) that executes differently-sized SPMD tasks —
+Cylon-style dataframe ops and LM train/serve steps — on dynamically carved
+sub-meshes with private communicators, plus the batch-execution baseline it
+is compared against in the paper."""
+from repro.core.communicator import Communicator, build_communicator
+from repro.core.pilot import (
+    InsufficientResources, Pilot, PilotDescription, PilotManager,
+    ResourceManager,
+)
+from repro.core.pipeline import Pipeline, run_pipelines
+from repro.core.raptor import RaptorMaster, session
+from repro.core.scheduler import (
+    BATCH, HETEROGENEOUS, LiveScheduler, SimOptions, SimReport,
+    default_overhead_model, simulate,
+)
+from repro.core.task import Task, TaskDescription, TaskState
+
+__all__ = [
+    "BATCH", "HETEROGENEOUS", "Communicator", "InsufficientResources",
+    "LiveScheduler", "Pilot", "PilotDescription", "PilotManager", "Pipeline",
+    "RaptorMaster", "ResourceManager", "SimOptions", "SimReport", "Task",
+    "TaskDescription", "TaskState", "build_communicator",
+    "default_overhead_model", "run_pipelines", "session", "simulate",
+]

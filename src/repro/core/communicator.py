@@ -1,0 +1,66 @@
+"""Private per-task communicators — the JAX analogue of RAPTOR's runtime
+MPI_Comm construction.
+
+A Communicator wraps a ``jax.sharding.Mesh`` built over the exact device
+subset allocated to one task.  Construction is timed; the paper reports this
+as the (constant, ~seconds) RP overhead in Table 2, and benchmarks/
+bench_overhead.py reproduces that measurement here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Communicator:
+    mesh: Any                     # jax.sharding.Mesh
+    devices: tuple
+    axes: tuple
+    shape: tuple
+    build_seconds: float
+    uid: str = ""
+
+    @property
+    def size(self) -> int:
+        return len(self.devices)
+
+    def sub(self, axis: str):
+        """Axis size lookup (MPI_Comm_size analogue per axis)."""
+        return dict(zip(self.axes, self.shape))[axis]
+
+
+def _factor_shape(n: int, naxes: int) -> tuple:
+    """Default near-square factorization of n ranks into naxes axes."""
+    if naxes == 1:
+        return (n,)
+    shape = []
+    rem = n
+    for i in range(naxes - 1):
+        f = int(round(rem ** (1 / (naxes - i))))
+        while f > 1 and rem % f:
+            f -= 1
+        shape.append(max(f, 1))
+        rem //= max(f, 1)
+    shape.append(rem)
+    return tuple(shape)
+
+
+def build_communicator(devices, axes=("df",), shape: Optional[tuple] = None,
+                       uid: str = "") -> Communicator:
+    """Construct the private mesh over ``devices`` (the heterogeneous-runtime
+    core: every task gets its own isolated communicator, any size)."""
+    from jax.sharding import Mesh
+
+    t0 = time.perf_counter()
+    n = len(devices)
+    shape = shape or _factor_shape(n, len(axes))
+    assert int(np.prod(shape)) == n, (shape, n)
+    arr = np.array(devices, dtype=object).reshape(shape)
+    mesh = Mesh(arr, axes)
+    dt = time.perf_counter() - t0
+    return Communicator(mesh=mesh, devices=tuple(devices), axes=tuple(axes),
+                        shape=tuple(shape), build_seconds=dt, uid=uid)

@@ -1,0 +1,105 @@
+"""Pilot abstraction: acquire a device pool once, then let the scheduler carve
+it up per task (the paper's core resource-management idea).
+
+ResourceManager models the HPC RM (Slurm/LSF): it owns the device inventory,
+honours allocate/release, and supports *failure injection* (devices lost at
+runtime) plus *elastic* grow/shrink — the fault-tolerance hooks exercised by
+tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+
+class InsufficientResources(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class PilotDescription:
+    n_devices: int
+    name: str = "pilot"
+
+
+class ResourceManager:
+    """Device inventory with allocate/release and failure injection.
+
+    Devices are any hashable handles; in real mode they are jax.Device
+    objects, in simulation they are integer rank ids.
+    """
+
+    def __init__(self, devices: Sequence):
+        self._lock = threading.Lock()
+        self._all = list(devices)
+        self._free = list(devices)
+        self._failed: set = set()
+
+    @property
+    def total(self) -> int:
+        return len(self._all)
+
+    @property
+    def n_free(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def allocate(self, n: int) -> tuple:
+        with self._lock:
+            if len(self._free) < n:
+                raise InsufficientResources(f"want {n}, free {len(self._free)}")
+            got, self._free = self._free[:n], self._free[n:]
+            return tuple(got)
+
+    def release(self, devices: Sequence):
+        with self._lock:
+            for d in devices:
+                if d not in self._failed and d in self._all:
+                    self._free.append(d)
+
+    def fail_devices(self, devices: Sequence):
+        """Failure injection: devices die; running tasks on them must retry."""
+        with self._lock:
+            self._failed.update(devices)
+            self._all = [d for d in self._all if d not in self._failed]
+            self._free = [d for d in self._free if d not in self._failed]
+
+    def add_devices(self, devices: Sequence):
+        """Elastic grow."""
+        with self._lock:
+            self._all.extend(devices)
+            self._free.extend(devices)
+
+
+class Pilot:
+    """An acquired resource pool (placeholder for compute, as in RP)."""
+
+    def __init__(self, desc: PilotDescription, rm: ResourceManager):
+        self.desc = desc
+        self.rm = rm
+        self.devices = rm.allocate(desc.n_devices)
+        self._own_rm = ResourceManager(self.devices)
+
+    @property
+    def resource_manager(self) -> ResourceManager:
+        return self._own_rm
+
+    def cancel(self):
+        self.rm.release(self.devices)
+
+
+class PilotManager:
+    """Owns pilots over a global inventory (rp.PilotManager analogue)."""
+
+    def __init__(self, devices: Optional[Sequence] = None):
+        if devices is None:
+            import jax
+            devices = jax.devices()
+        self.global_rm = ResourceManager(devices)
+        self.pilots: list[Pilot] = []
+
+    def submit_pilot(self, desc: PilotDescription) -> Pilot:
+        p = Pilot(desc, self.global_rm)
+        self.pilots.append(p)
+        return p

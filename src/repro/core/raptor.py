@@ -1,0 +1,54 @@
+"""RAPTOR-style master/worker facade over the schedulers (paper Fig. 3/4).
+
+The master receives TaskDescriptions, asks the scheduler to place them on the
+pilot's devices, builds the private communicator per task, and collects
+results — i.e. the orchestration flow of the paper in JAX terms:
+
+    client -> PilotManager -> Pilot -> RaptorMaster -> (comm, task) -> result
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.pilot import Pilot, PilotDescription, PilotManager
+from repro.core.scheduler import (
+    BATCH, HETEROGENEOUS, LiveScheduler, SimOptions, SimReport, simulate,
+)
+from repro.core.task import TaskDescription
+
+
+class RaptorMaster:
+    """Execution master bound to one pilot."""
+
+    def __init__(self, pilot: Pilot, policy: str = HETEROGENEOUS):
+        self.pilot = pilot
+        self.policy = policy
+        self._queue: list[TaskDescription] = []
+
+    def submit(self, desc: TaskDescription):
+        self._queue.append(desc)
+        return desc
+
+    def submit_many(self, descs: Sequence[TaskDescription]):
+        self._queue.extend(descs)
+
+    def run(self, timeout: float = 600.0) -> SimReport:
+        """Execute all queued tasks on real devices; returns the report."""
+        sched = LiveScheduler(self.pilot.resource_manager, self.policy)
+        descs, self._queue = self._queue, []
+        return sched.run(descs, timeout=timeout)
+
+    def run_simulated(self, opts: Optional[SimOptions] = None) -> SimReport:
+        """Execute on the virtual clock (large-scale experiments)."""
+        opts = opts or SimOptions(policy=self.policy)
+        descs, self._queue = self._queue, []
+        return simulate(descs, self.pilot.desc.n_devices, opts)
+
+
+def session(n_devices: Optional[int] = None, policy: str = HETEROGENEOUS,
+            devices=None) -> RaptorMaster:
+    """One-call setup: PilotManager -> Pilot -> RaptorMaster."""
+    pm = PilotManager(devices=devices)
+    n = n_devices or pm.global_rm.total
+    pilot = pm.submit_pilot(PilotDescription(n_devices=n))
+    return RaptorMaster(pilot, policy)

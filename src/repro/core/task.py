@@ -1,0 +1,65 @@
+"""Task abstractions — the Radical-Pilot TaskDescription analogue.
+
+A Task is an SPMD program (Python callable receiving a Communicator) plus its
+resource requirements in *ranks* (devices).  The runtime constructs a private
+sub-mesh communicator of exactly ``ranks`` devices at launch time and delivers
+it to the payload — the JAX-native equivalent of RAPTOR building a private
+MPI communicator per task.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, Callable, Optional
+
+_uid = itertools.count()
+
+
+class TaskState(enum.Enum):
+    NEW = "NEW"
+    PENDING = "PENDING"
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    CANCELED = "CANCELED"
+
+
+@dataclasses.dataclass
+class TaskDescription:
+    """What the user submits (mirrors rp.TaskDescription)."""
+    name: str
+    ranks: int                                   # devices required
+    fn: Callable[..., Any]                       # fn(comm, *args) -> result
+    args: tuple = ()
+    kwargs: dict = dataclasses.field(default_factory=dict)
+    mesh_axes: tuple = ("df",)                   # axis names for the private mesh
+    mesh_shape: Optional[tuple] = None           # default: (ranks,)
+    priority: int = 0
+    max_retries: int = 2
+    duration_model: Optional[Callable[[int], float]] = None  # ranks -> seconds (sim)
+    tags: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Task:
+    desc: TaskDescription
+    uid: int = dataclasses.field(default_factory=lambda: next(_uid))
+    state: TaskState = TaskState.NEW
+    result: Any = None
+    error: Optional[str] = None
+    retries: int = 0
+    submit_time: float = 0.0
+    start_time: float = 0.0
+    end_time: float = 0.0
+    comm_build_time: float = 0.0     # "overhead" column of paper Table 2
+    devices: tuple = ()
+    speculative_of: Optional[int] = None   # uid of the task this duplicates
+
+    @property
+    def run_seconds(self) -> float:
+        return self.end_time - self.start_time
+
+    @property
+    def wait_seconds(self) -> float:
+        return self.start_time - self.submit_time

@@ -1,0 +1,20 @@
+"""Partitioners: map rows -> destination rank (Cylon's shuffle targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.dataframe.ops_local import hash_key
+from repro.dataframe.table import Table
+
+
+def hash_partition(table: Table, key: str, n_parts: int) -> jnp.ndarray:
+    """Destination rank per row (uint32 hash mod P); invalid rows -> 0."""
+    tgt = (hash_key(table.columns[key]) % jnp.uint32(n_parts)).astype(jnp.int32)
+    return jnp.where(table.valid_mask(), tgt, 0)
+
+
+def range_partition(table: Table, key: str, splitters: jnp.ndarray) -> jnp.ndarray:
+    """Destination = index of the splitter range containing the key.
+    splitters: (P-1,) sorted.  Used by distributed sample-sort."""
+    tgt = jnp.searchsorted(splitters, table.columns[key], side="right")
+    return jnp.where(table.valid_mask(), tgt.astype(jnp.int32), 0)

@@ -1,0 +1,70 @@
+"""Columnar Table: the Cylon/Arrow table abstraction under XLA's static-shape
+constraint.  Columns are fixed-capacity padded arrays plus a valid-row count;
+every operator preserves the (capacity, nrows) contract and reports overflow
+explicitly instead of reallocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    columns: Dict[str, jnp.ndarray]   # each (capacity, ...)
+    nrows: jnp.ndarray                # scalar int32
+
+    # --- pytree protocol ---
+    def tree_flatten(self):
+        names = sorted(self.columns)
+        return ([self.columns[n] for n in names] + [self.nrows], names)
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(columns=dict(zip(names, children[:-1])), nrows=children[-1])
+
+    # --- helpers ---
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def column_names(self):
+        return sorted(self.columns)
+
+    def valid_mask(self) -> jnp.ndarray:
+        return jnp.arange(self.capacity) < self.nrows
+
+    def to_numpy(self) -> dict:
+        n = int(self.nrows)
+        return {k: np.asarray(v)[:n] for k, v in self.columns.items()}
+
+
+def from_numpy(data: dict, capacity: int | None = None) -> Table:
+    n = len(next(iter(data.values())))
+    cap = capacity or n
+    assert cap >= n
+    cols = {}
+    for k, v in data.items():
+        v = np.asarray(v)
+        pad = np.zeros((cap - n,) + v.shape[1:], v.dtype)
+        cols[k] = jnp.asarray(np.concatenate([v, pad], axis=0))
+    return Table(columns=cols, nrows=jnp.asarray(n, jnp.int32))
+
+
+def empty_like(table: Table, capacity: int) -> Table:
+    cols = {k: jnp.zeros((capacity,) + v.shape[1:], v.dtype)
+            for k, v in table.columns.items()}
+    return Table(columns=cols, nrows=jnp.asarray(0, jnp.int32))
+
+
+def key_sentinel(dtype) -> jnp.ndarray:
+    """Max value used to push invalid rows to the end of sorts."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+    return jnp.asarray(jnp.finfo(dtype).max, dtype)

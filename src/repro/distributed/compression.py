@@ -1,0 +1,89 @@
+"""Gradient compression with error feedback — distributed-optimization trick
+for the DP all-reduce at 1000+ node scale.
+
+int8 block quantization: per-block absmax scales, values quantized to int8.
+The all-reduce then moves int16 accumulators (safe for group sums up to
+256 ranks) — 2 bytes/elem instead of 4 (f32 grads) — and the residual
+(quantization error) is fed back into the next step's gradient (error
+feedback, Seide et al. style), which keeps SGD/Adam convergence.
+
+Used inside shard_map over the DP axis; see ``compressed_psum_mean`` and
+tests/test_compression.py for the convergence check.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, n, pad
+
+
+def quantize_int8(x):
+    """x any-shape float -> (q int8 (nblk, BLOCK), scales (nblk,), meta)."""
+    flat, n, pad = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale, (x.shape, n)
+
+
+def dequantize_int8(q, scale, meta):
+    shape, n = meta
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compressed_psum_mean(x, axis: str, *, error: jnp.ndarray | None = None):
+    """Mean-all-reduce of x over a named axis with int8 quantization and
+    error feedback.  Returns (mean, new_error).
+
+    The wire format is int16 (quantized values summed exactly across <= 256
+    ranks); scales are f32 but tiny (1/BLOCK of the payload).  Net traffic:
+    ~2 bytes/element vs 4 for f32 — 2x compression on the DP all-reduce.
+    """
+    n = jax.lax.axis_size(axis)
+    xe = x + (error if error is not None else 0.0)
+    q, scale, meta = quantize_int8(xe)
+    local_deq = dequantize_int8(q, scale, meta)
+    new_error = xe - local_deq
+    # shared scale: use the max scale across ranks so integer sums commute
+    gscale = jax.lax.pmax(scale, axis)
+    requant = jnp.clip(
+        jnp.round(local_deq_blocks(local_deq, meta) / gscale[:, None]),
+        -127, 127).astype(jnp.int16)
+    summed = jax.lax.psum(requant, axis)
+    mean = (summed.astype(jnp.float32) * gscale[:, None] / n)
+    return _unblock(mean, meta), new_error
+
+
+def local_deq_blocks(x, meta):
+    flat, _, _ = _pad_to_block(x)
+    return flat.reshape(-1, BLOCK)
+
+
+def _unblock(blocks, meta):
+    shape, n = meta
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def tree_compressed_psum_mean(tree, axis: str, errors=None):
+    """Apply compressed_psum_mean over a pytree; threads per-leaf error."""
+    leaves, treedef = jax.tree.flatten(tree)
+    errs = (treedef.flatten_up_to(errors) if errors is not None
+            else [None] * len(leaves))
+    outs, new_errs = [], []
+    for leaf, err in zip(leaves, errs):
+        m, e = compressed_psum_mean(leaf, axis, error=err)
+        outs.append(m)
+        new_errs.append(e)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef, new_errs)

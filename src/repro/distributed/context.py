@@ -1,0 +1,103 @@
+"""Trace-time mesh context so model code can apply
+``with_sharding_constraint`` without plumbing the mesh everywhere.
+
+steps.make_* wraps each step body in ``axes_ctx(mesh.axis_names)``; model
+modules call ``constrain(x, 'data', None, 'model', ...)`` and the constraint
+is applied only for axis names present in the ambient mesh (no-op in
+single-device smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def axes_ctx(mesh, moe_impl: str = "gspmd", dp=("pod", "data")):
+    """Accepts a Mesh or a dict name->size."""
+    is_mesh = hasattr(mesh, "axis_names")
+    sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if is_mesh else dict(mesh))
+    prev = getattr(_state, "sizes", {})
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_moe = getattr(_state, "moe_impl", "gspmd")
+    prev_dp = getattr(_state, "dp", ("pod", "data"))
+    _state.sizes = sizes
+    _state.mesh = mesh if is_mesh else None
+    _state.moe_impl = moe_impl
+    _state.dp = tuple(dp)
+    try:
+        yield
+    finally:
+        _state.sizes = prev
+        _state.mesh = prev_mesh
+        _state.moe_impl = prev_moe
+        _state.dp = prev_dp
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def current_moe_impl() -> str:
+    return getattr(_state, "moe_impl", "gspmd")
+
+
+def current_axes() -> dict:
+    return getattr(_state, "sizes", {})
+
+
+def _filter(entry, sizes, dim):
+    """Keep only mesh axes that exist AND divide the dim size."""
+    if entry is None:
+        return None
+    cand = entry if isinstance(entry, (tuple, list)) else (entry,)
+    keep, prod = [], 1
+    for a in cand:
+        n = sizes.get(a, 0)
+        if n and dim % (prod * n) == 0:
+            keep.append(a)
+            prod *= n
+    if not keep:
+        return None
+    return tuple(keep) if len(keep) > 1 else keep[0]
+
+
+def constrain(x, *spec):
+    """Apply a PartitionSpec constraint, dropping axes that are absent from
+    the ambient mesh or do not divide the dimension.  No-op without a mesh
+    context (single-device smoke tests)."""
+    sizes = current_axes()
+    if not sizes:
+        return x
+    filtered = [_filter(e, sizes, d) for e, d in zip(spec, x.shape)]
+    if all(e is None for e in filtered):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*filtered))
+
+
+def current_dp() -> tuple:
+    return getattr(_state, "dp", ("pod", "data"))
+
+
+def shard_tokens(x):
+    """Batch-shard an activation whose leading dim is (global) batch."""
+    return constrain(x, current_dp(), *([None] * (x.ndim - 1)))
+
+
+def shard_heads(x):
+    """(B, S, H, hd): batch over DP, heads over TP."""
+    dp = current_dp()
+    return constrain(x, dp, None, "model" if "model" not in dp else None, None)
+
+
+def shard_ff(x):
+    """(..., f): batch over DP, ff/vocab dim over TP."""
+    dp = current_dp()
+    return constrain(x, dp, *([None] * (x.ndim - 2)),
+                     "model" if "model" not in dp else None)

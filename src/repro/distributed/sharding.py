@@ -1,0 +1,214 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpec pytrees.
+
+Strategy (per ParallelConfig):
+  * TP   — heads / ff / experts / vocab over the 'model' axis, with a
+           divisibility fallback to replication (e.g. internvl2's 14 heads).
+  * FSDP — the 'embed'-like dim of every large weight over 'data'
+           (ZeRO-3 style; gathered per-layer under scan).
+  * DP   — batch dims over ('pod','data') (or what exists in the mesh).
+  * KV cache — batch over DP; kv-heads over 'model' when divisible, else the
+           sequence dim over 'model' (context-sharded cache).
+
+All rules are *name+shape based* walks of the actual pytrees, so new modules
+inherit sensible shardings without extra registration.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+TP_AXIS = "model"
+FSDP_AXIS = "data"
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def dp_axes(mesh: Mesh, parallel: ParallelConfig):
+    return tuple(a for a in parallel.dp_axes if a in mesh.axis_names)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 1 and n % k == 0
+
+
+def _axis_if(mesh, axis, dim_size, enabled=True):
+    return axis if (enabled and axis in mesh.axis_names
+                    and _div(dim_size, mesh_axis_size(mesh, axis))) else None
+
+
+def _fsdp_entry(mesh, parallel, dim_size):
+    """Longest prefix of parallel.fsdp_axes whose product divides the dim."""
+    if not parallel.fsdp:
+        return None
+    keep, prod = [], 1
+    for a in parallel.fsdp_axes:
+        n = mesh_axis_size(mesh, a)
+        if a in mesh.axis_names and n > 1 and dim_size % (prod * n) == 0:
+            keep.append(a)
+            prod *= n
+    if not keep:
+        return None
+    return tuple(keep) if len(keep) > 1 else keep[0]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+_TP_LAST = {"wg", "wi"}         # (..., d, f): shard f (output dim)
+_TP_FIRST = {"wo"}              # (..., f, d): shard f (input dim)
+_REPLICATE = {"ln", "ln1", "ln2", "ln3", "final_norm", "enc_norm", "norm_w",
+              "q_norm", "k_norm", "conv_b", "dt_bias", "A_log", "D",
+              "shared_gate", "count"}
+
+
+def _param_spec(path_keys, leaf, mesh, parallel: ParallelConfig, cfg: ModelConfig):
+    name = path_keys[-1]
+    tp_on = parallel.tensor_parallel
+    shape = leaf.shape
+    nd = leaf.ndim
+
+    def spec(*trailing):
+        """Pad with leading Nones for stacked layer dims."""
+        return P(*([None] * (nd - len(trailing)) + list(trailing)))
+
+    if name in _REPLICATE or nd == 0:
+        return P()
+
+    if name == "embedding":                      # (V, d)
+        return spec(_axis_if(mesh, TP_AXIS, shape[-2], tp_on),
+                    _fsdp_entry(mesh, parallel, shape[-1]))
+    if name == "lm_head":                        # (d, V)
+        return spec(_fsdp_entry(mesh, parallel, shape[-2]),
+                    _axis_if(mesh, TP_AXIS, shape[-1], tp_on))
+    if name in ("wq", "wk", "wv"):               # (..., d, H|K, hd)
+        return spec(_fsdp_entry(mesh, parallel, shape[-3]),
+                    _axis_if(mesh, TP_AXIS, shape[-2], tp_on),
+                    None)
+    if name == "wo" and nd >= 3 and shape[-2] == cfg.head_dim:
+        # attention output proj (..., H, hd, d)
+        return spec(_axis_if(mesh, TP_AXIS, shape[-3], tp_on),
+                    None,
+                    _fsdp_entry(mesh, parallel, shape[-1]))
+    if name == "router":                         # (..., d, E)
+        return spec(_fsdp_entry(mesh, parallel, shape[-2]), None)
+    if name in ("wg", "wi", "wo") and nd >= 3 and cfg.n_experts and \
+            shape[-3] == cfg.n_experts:          # (..., E, d, f) / (..., E, f, d)
+        e_ax = _axis_if(mesh, TP_AXIS, shape[-3], tp_on)
+        return spec(e_ax, _fsdp_entry(mesh, parallel, shape[-2]), None)
+    if name in _TP_LAST and nd >= 2:             # (..., d, f)
+        return spec(_fsdp_entry(mesh, parallel, shape[-2]),
+                    _axis_if(mesh, TP_AXIS, shape[-1], tp_on))
+    if name in _TP_FIRST and nd >= 2:            # (..., f, d)
+        return spec(_axis_if(mesh, TP_AXIS, shape[-2], tp_on),
+                    _fsdp_entry(mesh, parallel, shape[-1]))
+    # SSM weights: FSDP-only in the baseline (no TP on mamba blocks —
+    # documented; the perf pass revisits head-sharding for zamba2).
+    if name in ("in_proj", "x_proj", "out_proj"):   # (..., big, small-or-big)
+        return spec(_fsdp_entry(mesh, parallel, shape[-2]), None)
+    if name == "dt_proj":                        # (..., dtr, di)
+        return spec(None, _fsdp_entry(mesh, parallel, shape[-1]))
+    if name == "conv_w":
+        return P()
+    if nd >= 2:
+        # generic large 2D+: fsdp the second-to-last dim
+        return spec(_fsdp_entry(mesh, parallel, shape[-2]), None)
+    return P()
+
+
+def param_specs(params, mesh, parallel: ParallelConfig, cfg: ModelConfig):
+    def f(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        return _param_spec(keys, leaf, mesh, parallel, cfg)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def opt_specs(opt_shape, pspecs):
+    """Optimizer moments shard exactly like params; count is replicated."""
+    return {
+        "mu": pspecs,
+        "nu": pspecs,
+        "count": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_specs(batch_shapes, mesh, parallel: ParallelConfig):
+    dp = dp_axes(mesh, parallel)
+    out = {}
+    for name, (shape, _) in batch_shapes.items():
+        bdim = dp if _div(shape[0], _dp_size(mesh, dp)) else None
+        out[name] = P(*([bdim] + [None] * (len(shape) - 1)))
+    return out
+
+
+def _dp_size(mesh, dp):
+    n = 1
+    for a in dp:
+        n *= mesh_axis_size(mesh, a)
+    return n
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh, parallel: ParallelConfig):
+    """Walk the cache pytree (ShapeDtypeStructs or arrays)."""
+    dp = dp_axes(mesh, parallel)
+    dpn = _dp_size(mesh, dp)
+    tpn = mesh_axis_size(mesh, TP_AXIS)
+    tp_on = parallel.tensor_parallel
+
+    def kv_spec(leaf):
+        # (..., B, S, K, hd)
+        nd = leaf.ndim
+        b, s, k = leaf.shape[-4], leaf.shape[-3], leaf.shape[-2]
+        b_ax = dp if _div(b, dpn) else None
+        if tp_on and _div(k, tpn):
+            k_ax, s_ax = TP_AXIS, None
+        elif tp_on and _div(s, tpn):
+            k_ax, s_ax = None, TP_AXIS
+        else:
+            k_ax = s_ax = None
+        if b_ax is None and _div(s, dpn * (tpn if s_ax else 1)):
+            # batch unshardable (e.g. long_500k B=1): context-shard over data too
+            s_ax = tuple(dp) + ((TP_AXIS,) if s_ax else ())
+        return P(*([None] * (nd - 4) + [b_ax, s_ax, k_ax, None]))
+
+    def ssm_spec(leaf, kind):
+        nd = leaf.ndim
+        if kind == "conv":      # (..., B, k-1, C)
+            b, c = leaf.shape[-3], leaf.shape[-1]
+            return P(*([None] * (nd - 3) +
+                       [dp if _div(b, dpn) else None, None,
+                        _axis_if(mesh, TP_AXIS, c, tp_on)]))
+        if cfg.ssm_version == 2:  # h: (..., B, nh, hd, st)
+            b, nh = leaf.shape[-4], leaf.shape[-3]
+            return P(*([None] * (nd - 4) +
+                       [dp if _div(b, dpn) else None,
+                        _axis_if(mesh, TP_AXIS, nh, tp_on), None, None]))
+        b, di = leaf.shape[-3], leaf.shape[-2]   # h: (..., B, di, st)
+        return P(*([None] * (nd - 3) +
+                   [dp if _div(b, dpn) else None,
+                    _axis_if(mesh, TP_AXIS, di, tp_on), None]))
+
+    def f(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        if name in ("k", "v", "xk", "xv"):
+            return kv_spec(leaf)
+        if name == "conv":
+            return ssm_spec(leaf, "conv")
+        if name == "h":
+            return ssm_spec(leaf, "h")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,198 @@
+"""Step builders: jitted train / prefill / decode steps with explicit
+in/out shardings, plus abstract-input builders for the AOT dry-run.
+
+Every step is a plain function of pytrees, so ``jax.jit(...).lower(*abstract)``
+works with ShapeDtypeStruct stand-ins (no allocation) — the multi-pod dry-run
+path — and with concrete arrays for real training/serving.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.distributed import sharding as sh
+from repro.distributed.context import axes_ctx
+from repro.models import registry
+from repro.models.attention import AttnMode
+from repro.train import optimizer as opt_mod
+
+
+def _attn_mode(cfg: ModelConfig, parallel: ParallelConfig, seq_len: int) -> AttnMode:
+    unroll = getattr(cfg, "unroll_scans", False)
+    if seq_len <= 1024 and not unroll:
+        return AttnMode(kind="full")
+    blk = parallel.attn_block
+    return AttnMode(kind="blockwise", q_block=blk, kv_block=blk,
+                    causal_skip=cfg.causal_skip, unroll=unroll)
+
+
+def _smax(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Cache length: VLM caches hold the patch prefix + text tokens."""
+    return shape.seq_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+
+
+class StepBundle(NamedTuple):
+    fn: Any                 # the jitted function
+    abstract_args: tuple    # ShapeDtypeStructs for .lower()
+    info: dict
+
+
+def _sds(tree, mesh, specs):
+    """ShapeDtypeStruct pytree with NamedShardings attached."""
+    return jax.tree.map(
+        lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, jax.Array)))
+
+
+def _batch_sds(shapes, mesh, specs):
+    return {
+        k: jax.ShapeDtypeStruct(shape, dt, sharding=NamedSharding(mesh, specs[k]))
+        for k, (shape, dt) in shapes.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, mesh, parallel: ParallelConfig,
+                    shape: ShapeConfig, ocfg: opt_mod.OptimizerConfig | None = None):
+    ocfg = ocfg or opt_mod.OptimizerConfig()
+    api = registry.get_model(cfg)
+    mode = _attn_mode(cfg, parallel, shape.seq_len)
+
+    def loss_of(params, batch):
+        return api.loss_fn(params, cfg, batch, mode)
+
+    def train_step(params, opt_state, batch):
+      with axes_ctx(mesh, parallel.moe_impl, parallel.dp_axes):
+        if parallel.microbatches > 1:
+            mb = parallel.microbatches
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(acc, mbatch):
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                return jax.tree.map(jnp.add, acc,
+                                    jax.tree.map(lambda x: x / mb, (l, g))), None
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(acc_body, zero, micro)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        params, opt_state, metrics = opt_mod.adamw_update(grads, opt_state, params, ocfg)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    # shardings
+    params_shape = registry.eval_params_shape(cfg)
+    pspecs = sh.param_specs(params_shape, mesh, parallel, cfg)
+    opt_shape = jax.eval_shape(opt_mod.adamw_init, params_shape)
+    ospecs = sh.opt_specs(opt_shape, pspecs)
+    bshapes = registry.train_batch_shapes(cfg, shape.global_batch, shape.seq_len)
+    bspecs = sh.batch_specs(bshapes, mesh, parallel)
+    metric_specs = {"loss": P(), "lr": P(), "grad_norm": P()}
+
+    jit_step = jax.jit(
+        train_step,
+        in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, ospecs),
+                      sh.named(mesh, bspecs)),
+        out_shardings=(sh.named(mesh, pspecs), sh.named(mesh, ospecs),
+                       sh.named(mesh, metric_specs)),
+        donate_argnums=(0, 1),
+    )
+    abstract = (
+        _sds(params_shape, mesh, pspecs),
+        _sds(opt_shape, mesh, ospecs),
+        _batch_sds(bshapes, mesh, bspecs),
+    )
+    return StepBundle(jit_step, abstract,
+                      {"pspecs": pspecs, "ospecs": ospecs, "bspecs": bspecs,
+                       "mode": mode})
+
+
+# ---------------------------------------------------------------------------
+# prefill step
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, mesh, parallel: ParallelConfig,
+                      shape: ShapeConfig):
+    api = registry.get_model(cfg)
+    mode = _attn_mode(cfg, parallel, shape.seq_len)
+    smax = _smax(cfg, shape)
+
+    def prefill_step(params, batch):
+        with axes_ctx(mesh, parallel.moe_impl, parallel.dp_axes):
+            cache, logits = api.prefill(params, cfg, batch, smax, mode)
+            return cache, logits
+
+    params_shape = registry.eval_params_shape(cfg)
+    pspecs = sh.param_specs(params_shape, mesh, parallel, cfg)
+    bshapes = registry.prefill_batch_shapes(cfg, shape.global_batch, shape.seq_len)
+    bspecs = sh.batch_specs(bshapes, mesh, parallel)
+    cache_shape = registry.eval_cache_shape(cfg, shape.global_batch, smax)
+    cspecs = sh.cache_specs(cfg, cache_shape, mesh, parallel)
+    logit_spec = P(sh.dp_axes(mesh, parallel)
+                   if shape.global_batch % sh._dp_size(mesh, sh.dp_axes(mesh, parallel)) == 0
+                   else None,
+                   sh._axis_if(mesh, sh.TP_AXIS, cfg.vocab_size, parallel.tensor_parallel))
+
+    jit_step = jax.jit(
+        prefill_step,
+        in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, bspecs)),
+        out_shardings=(sh.named(mesh, cspecs), NamedSharding(mesh, logit_spec)),
+    )
+    abstract = (_sds(params_shape, mesh, pspecs), _batch_sds(bshapes, mesh, bspecs))
+    return StepBundle(jit_step, abstract, {"pspecs": pspecs, "cspecs": cspecs})
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+def make_decode_step(cfg: ModelConfig, mesh, parallel: ParallelConfig,
+                     shape: ShapeConfig):
+    api = registry.get_model(cfg)
+    smax = _smax(cfg, shape)
+
+    def decode_step(params, batch, cache):
+        with axes_ctx(mesh, parallel.moe_impl, parallel.dp_axes):
+            logits, cache = api.decode_step(params, cfg, batch, cache)
+            return logits, cache
+
+    params_shape = registry.eval_params_shape(cfg)
+    pspecs = sh.param_specs(params_shape, mesh, parallel, cfg)
+    bshapes = registry.decode_batch_shapes(cfg, shape.global_batch)
+    bspecs = sh.batch_specs(bshapes, mesh, parallel)
+    cache_shape = registry.eval_cache_shape(cfg, shape.global_batch, smax)
+    cspecs = sh.cache_specs(cfg, cache_shape, mesh, parallel)
+    dp = sh.dp_axes(mesh, parallel)
+    logit_spec = P(dp if shape.global_batch % sh._dp_size(mesh, dp) == 0 else None,
+                   sh._axis_if(mesh, sh.TP_AXIS, cfg.vocab_size, parallel.tensor_parallel))
+
+    jit_step = jax.jit(
+        decode_step,
+        in_shardings=(sh.named(mesh, pspecs), sh.named(mesh, bspecs),
+                      sh.named(mesh, cspecs)),
+        out_shardings=(NamedSharding(mesh, logit_spec), sh.named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    abstract = (
+        _sds(params_shape, mesh, pspecs),
+        _batch_sds(bshapes, mesh, bspecs),
+        _sds(cache_shape, mesh, cspecs),
+    )
+    return StepBundle(jit_step, abstract, {"pspecs": pspecs, "cspecs": cspecs})
+
+
+def make_step(cfg, mesh, parallel, shape):
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, parallel, shape)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, parallel, shape)
+    return make_decode_step(cfg, mesh, parallel, shape)

@@ -1,0 +1,66 @@
+"""Bitonic sort Pallas TPU kernel — the local-sort hot-spot of distributed
+sample-sort.
+
+Sorting networks are the TPU-idiomatic sort: fixed data-independent
+compare-exchange stages that vectorize over the VPU lanes, no data-dependent
+control flow.  Keys (+ a payload permutation) for one block live entirely in
+VMEM; the O(log^2 n) stages are statically unrolled.
+
+Grid: (rows,) — each grid cell sorts one independent row of a (rows, n)
+batch (n must be a power of two; ops.py pads with +inf sentinels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(keys, payload, partner_xor: int, direction_bit: int, n: int):
+    idx = jax.lax.iota(jnp.int32, n)
+    partner = idx ^ partner_xor
+    pk = keys[partner]
+    pp = payload[partner]
+    is_low = idx < partner
+    ascending = (idx & direction_bit) == 0
+    keep_self = jnp.where(is_low,
+                          jnp.where(ascending, keys <= pk, keys >= pk),
+                          jnp.where(ascending, keys >= pk, keys <= pk))
+    new_keys = jnp.where(keep_self, keys, pk)
+    new_payload = jnp.where(keep_self, payload, pp)
+    return new_keys, new_payload
+
+
+def _kernel(k_ref, p_ref, ko_ref, po_ref, *, n: int):
+    keys = k_ref[0]
+    payload = p_ref[0]
+    size = 2
+    while size <= n:
+        stride = size // 2
+        while stride >= 1:
+            keys, payload = _compare_exchange(keys, payload, stride, size, n)
+            stride //= 2
+        size *= 2
+    ko_ref[0] = keys
+    po_ref[0] = payload
+
+
+def bitonic_sort_kernel(keys, payload, *, interpret: bool = False):
+    """keys (rows, n) with n a power of two; payload (rows, n) int32.
+    Returns (sorted_keys, permuted_payload), ascending per row."""
+    rows, n = keys.shape
+    assert n & (n - 1) == 0, "n must be a power of two"
+    kernel = functools.partial(_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, n), lambda r: (r, 0)),
+                  pl.BlockSpec((1, n), lambda r: (r, 0))],
+        out_specs=[pl.BlockSpec((1, n), lambda r: (r, 0)),
+                   pl.BlockSpec((1, n), lambda r: (r, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, n), keys.dtype),
+                   jax.ShapeDtypeStruct((rows, n), payload.dtype)],
+        interpret=interpret,
+    )(keys, payload)

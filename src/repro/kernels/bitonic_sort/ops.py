@@ -1,0 +1,35 @@
+"""jit'd wrapper: pads to a power of two with max-sentinels, sorts, trims."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitonic_sort.bitonic_sort import bitonic_sort_kernel
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort(keys, payload=None, *, interpret: bool = False):
+    """keys (rows, n) any float/int; optional payload (rows, n) int32.
+    Returns (sorted_keys, payload_perm) trimmed to the input width."""
+    rows, n = keys.shape
+    m = _next_pow2(n)
+    if payload is None:
+        payload = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (rows, n))
+    if m != n:
+        if jnp.issubdtype(keys.dtype, jnp.integer):
+            sent = jnp.iinfo(keys.dtype).max
+        else:
+            sent = jnp.finfo(keys.dtype).max
+        keys = jnp.pad(keys, ((0, 0), (0, m - n)), constant_values=sent)
+        payload = jnp.pad(payload, ((0, 0), (0, m - n)), constant_values=-1)
+    ks, ps = bitonic_sort_kernel(keys, payload, interpret=interpret)
+    return ks[:, :n], ps[:, :n]

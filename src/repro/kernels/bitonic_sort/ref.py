@@ -1,0 +1,10 @@
+"""Oracle: jnp.sort / argsort-gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sort_ref(keys, payload):
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return jnp.take_along_axis(keys, order, -1), \
+        jnp.take_along_axis(payload, order, -1)

@@ -1,0 +1,91 @@
+"""Flash attention Pallas TPU kernel: online-softmax tiling with the
+(m, l, acc) running state in VMEM scratch across the sequential kv-block grid
+dimension.  GQA is handled in the BlockSpec index maps (kv head = h // group),
+so grouped K/V are never materialized per query head.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — the last dimension iterates
+sequentially per TPU core, which is what makes the scratch carry valid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, q_block: int, kv_block: int,
+            kv_blocks: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                  # (qb, hd)
+    k = k_ref[0, 0]                                  # (kb, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        rows = i * q_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = j * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    v = v_ref[0, 0]                                  # (kb, hd)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == kv_blocks - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, q_block: int = 128,
+                           kv_block: int = 128, interpret: bool = False):
+    """q (B, H, Sq, hd); k/v (B, K, Sk, hd) with H = K * group.
+    Returns (B, H, Sq, hd) in q.dtype."""
+    b, h, sq, hd = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    assert sq % q_block == 0 and sk % kv_block == 0
+    tq, tk = sq // q_block, sk // kv_block
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               q_block=q_block, kv_block=kv_block, kv_blocks=tk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, tq, tk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, hd),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""jit'd public wrapper: (B,S,H,hd) layout + padding + GQA plumbing."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("causal", "q_block", "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
+                    kv_block: int = 128, interpret: bool = False):
+    """Model-layout entry point: q (B,Sq,H,hd), k/v (B,Sk,K,hd).
+    Pads sequence lengths up to tile multiples (padded keys are masked by the
+    causal structure / a validity clamp) and restores the layout."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    pad_q = (-sq) % q_block
+    pad_k = (-sk) % kv_block
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # pad keys with a sentinel that loses the softmax: zeros are fine for
+        # causal (out of range); for non-causal we mask via huge negative dot —
+        # achieved by padding K with zeros and relying on explicit masking in
+        # the kernel only for causal. Non-causal callers must pass aligned Sk.
+        assert causal, "non-causal flash requires kv_block-aligned Sk"
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_kernel(qt, kt, vt, causal=causal, q_block=q_block,
+                                 kv_block=kv_block, interpret=interpret)
+    if pad_q:
+        out = out[:, :, :sq]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q (B,H,Sq,hd); k/v (B,K,Sk,hd), H = K*group. Naive softmax attention."""
+    b, h, sq, hd = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * (hd ** -0.5)
+    if causal:
+        sk = k.shape[2]
+        rows = jnp.arange(sq)[:, None] + (sk - sq)
+        s = jnp.where(jnp.arange(sk)[None, :] <= rows, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v).astype(q.dtype)

@@ -1,0 +1,69 @@
+"""Radix/hash partition Pallas TPU kernel — the shuffle hot-spot.
+
+TPU adaptation of CUDA atomic-histogram binning: the per-block histogram is a
+ONE-HOT MATMUL (block_rows x n_buckets one-hot  @  ones) that runs on the MXU,
+and the stable intra-bucket positions come from an exclusive cumsum over the
+one-hot matrix.  Running bucket cursors persist in VMEM scratch across the
+sequential block grid, yielding a globally stable partition in one pass.
+
+Outputs: dest (n,) — destination slot of each row in bucket-major order —
+and the final histogram (n_buckets,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bucket_ref, dest_ref, hist_ref, cursor_scr, *, n_buckets: int,
+            block: int, n_blocks: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cursor_scr[...] = jnp.zeros_like(cursor_scr)
+
+    b = bucket_ref[0]                                        # (block,)
+    onehot = (b[:, None] ==
+              jax.lax.iota(jnp.int32, n_buckets)[None, :]).astype(jnp.float32)
+    # stable rank of each row within its bucket, inside this block
+    ranks_f = jnp.cumsum(onehot, axis=0) - onehot            # exclusive cumsum
+    rank = jnp.sum(ranks_f * onehot, axis=1).astype(jnp.int32)
+    # block histogram via MXU matmul: (1, block) @ (block, n_buckets)
+    ones = jnp.ones((1, block), jnp.float32)
+    hist = jax.lax.dot_general(ones, onehot, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)[0]
+    cursors = cursor_scr[...]
+    dest_ref[0] = cursors[b].astype(jnp.int32) + rank
+    cursor_scr[...] = cursors + hist.astype(jnp.int32)
+
+    @pl.when(i == n_blocks - 1)
+    def _emit():
+        hist_ref[...] = cursor_scr[...]
+
+
+def radix_partition_kernel(buckets, n_buckets: int, *, block: int = 1024,
+                           interpret: bool = False):
+    """buckets (n,) int32 in [0, n_buckets) -> (within_bucket_pos (n,),
+    histogram (n_buckets,)).  Caller turns (bucket, pos, hist-prefix) into
+    final destinations; see ops.py."""
+    n = buckets.shape[0]
+    block = min(block, n)
+    assert n % block == 0
+    kernel = functools.partial(_kernel, n_buckets=n_buckets, block=block,
+                               n_blocks=n // block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (0, i)),
+                   pl.BlockSpec((n_buckets,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((1, n), jnp.int32),
+                   jax.ShapeDtypeStruct((n_buckets,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((n_buckets,), jnp.int32)],
+        interpret=interpret,
+    )(buckets.reshape(1, n))

@@ -1,0 +1,19 @@
+"""Oracle: stable within-bucket positions + histogram via jnp."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def radix_partition_ref(buckets, n_buckets: int):
+    n = buckets.shape[0]
+    onehot = buckets[:, None] == jnp.arange(n_buckets)[None, :]
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)
+    within = jnp.sum(pos * onehot, axis=1).astype(jnp.int32)
+    hist = jnp.sum(onehot, axis=0).astype(jnp.int32)
+    return within, hist
+
+
+def destinations_ref(buckets, n_buckets: int):
+    within, hist = radix_partition_ref(buckets, n_buckets)
+    offsets = jnp.cumsum(hist) - hist
+    return offsets[buckets] + within, hist

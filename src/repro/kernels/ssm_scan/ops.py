@@ -1,0 +1,15 @@
+"""jit'd wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("d_block", "chunk", "interpret"))
+def ssm_scan(dt, A, Bm, Cm, x, *, d_block: int = 256, chunk: int = 64,
+             interpret: bool = False):
+    return ssm_scan_kernel(dt, A, Bm, Cm, x, d_block=d_block, chunk=chunk,
+                           interpret=interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: sequential lax.scan over time."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, A, Bm, Cm, x):
+    """dt,x (B,S,D); A (D,N); Bm,Cm (B,S,N) -> y (B,S,D) f32."""
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    b, s, d = dt.shape
+    n = A.shape[1]
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        decay = jnp.exp(dt_t[..., None] * A)           # (B,D,N)
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)      # (B,D)
+        return h, y
+
+    h0 = jnp.zeros((b, d, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bm, 1, 0),
+                          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(x, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)

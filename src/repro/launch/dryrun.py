@@ -1,0 +1,348 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell on
+the production mesh with ShapeDtypeStruct inputs (zero allocation), record
+memory_analysis / cost_analysis / per-collective traffic to JSON artifacts.
+
+MUST be run as its own process (the XLA_FLAGS line above only works before
+jax initializes devices):
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all          # spawns one subprocess per cell
+"""
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^}]*\}|\[[^\]]*\]<=\[[^\]]*\](?:T\([^)]*\))?)")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(spec: str, pod_size: int):
+    """Returns (group_size, crosses_pod). Handles {{0,1},{2,3}} and iota
+    [d0,d1]<=[s0,...]T(perm) formats exactly."""
+    import numpy as np
+    if spec.startswith("{"):
+        groups = [[int(x) for x in g.split(",") if x.strip()]
+                  for g in re.findall(r"\{([\d,\s]+)\}", spec)]
+    else:
+        m = re.match(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", spec)
+        dims = [int(x) for x in m.group(1).split(",")]
+        src = [int(x) for x in m.group(2).split(",")]
+        ids = np.arange(int(np.prod(src))).reshape(src)
+        if m.group(3):
+            ids = ids.transpose([int(x) for x in m.group(3).split(",")])
+        groups = ids.reshape(dims).tolist()
+        if len(dims) == 1:
+            groups = [groups]
+    gs = len(groups[0]) if groups else 1
+    crosses = any(len({d // pod_size for d in g}) > 1 for g in groups)
+    return gs, crosses
+
+
+_TRAFFIC = {  # per-device link traffic as multiple of result bytes (ring algos)
+    "all-reduce": lambda r, g: 2 * (g - 1) / g * r,
+    "all-gather": lambda r, g: (g - 1) / g * r,
+    "reduce-scatter": lambda r, g: (g - 1) * r,      # result is 1/g of input
+    "all-to-all": lambda r, g: (g - 1) / g * r,
+    "collective-permute": lambda r, g: r,
+}
+
+
+def parse_collectives(hlo_text: str, pod_size: int = 256):
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line.split("=")[0]:
+            continue
+        op = m.group("op")
+        rbytes = _bytes_of(m.group("rtype"))
+        gm = _GROUPS_RE.search(line)
+        gs, dcn = _parse_groups(gm.group(1), pod_size) if gm else (1, False)
+        traffic = _TRAFFIC[op](rbytes, max(gs, 1)) if gs > 1 else 0.0
+        out.append({"op": op, "result_bytes": rbytes, "group_size": gs,
+                    "traffic_bytes": traffic, "dcn": bool(dcn)})
+    return out
+
+
+def _group_size(cfg) -> int:
+    """Layers per scan iteration (superblock / hybrid group)."""
+    return cfg.shared_attn_period if cfg.family == "hybrid" else cfg.moe_layer_period
+
+
+def _analysis_cfg(cfg, n_groups: int):
+    """Tiny unrolled config for exact FLOP counting: cost_analysis counts scan
+    bodies ONCE (verified), so we compile k=1 and k=2 fully-unrolled groups and
+    extrapolate linearly — FLOPs/bytes/collectives are exactly linear in the
+    number of groups."""
+    kw = dict(n_layers=n_groups * _group_size(cfg), unroll_scans=True,
+              ssm_chunk=2048)
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = n_groups
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(cfg, shape, mesh, parallel):
+    """lower+compile; return (flops, bytes, collectives-by-op dict)."""
+    from repro.distributed.steps import make_step
+    bundle = make_step(cfg, mesh, parallel, shape)
+    with mesh:
+        compiled = bundle.fn.lower(*bundle.abstract_args).compile()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    by_op = {}
+    for c in colls:
+        k = c["op"] + ("_dcn" if c["dcn"] else "")
+        d = by_op.setdefault(k, {"count": 0, "traffic_bytes": 0.0})
+        d["count"] += 1
+        d["traffic_bytes"] += c["traffic_bytes"]
+    return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0), by_op)
+
+
+def _extrapolate(f1, f2, n_groups: int):
+    return f1 + (f2 - f1) * (n_groups - 1)
+
+
+def analysis_pass(cfg, shape, mesh, parallel):
+    """Exact per-device HLO FLOPs / bytes / collective traffic via two-point
+    unrolled extrapolation.
+
+    We fit on k=2 and k=3 groups (NOT k=1: single-group modules trigger
+    different global GSPMD decisions around the logits head, observed
+    empirically), then evaluate  f(G) = f2 + (f3 - f2) * (G - 2).
+    """
+    # big tiles keep unrolled-HLO small; with causal_skip we must keep the
+    # runtime tile size so the skipped lower-triangle is visible in the HLO.
+    blk = parallel.attn_block if cfg.causal_skip else 4096
+    pa = dataclasses.replace(parallel, attn_block=blk)
+    g_total = cfg.n_layers // _group_size(cfg)
+    if g_total < 3:
+        f = _measure(_analysis_cfg(cfg, g_total), shape, mesh, pa)
+        return {"flops": f[0], "bytes": f[1], "collectives": f[2],
+                "points": [f[0]]}
+
+    def ev(a, b):
+        return max(0.0, b + (b - a) * (g_total - 3))
+
+    fl2, by2, c2 = _measure(_analysis_cfg(cfg, 2), shape, mesh, pa)
+    fl3, by3, c3 = _measure(_analysis_cfg(cfg, 3), shape, mesh, pa)
+    colls = {}
+    for k in set(c2) | set(c3):
+        a = c2.get(k, {"count": 0, "traffic_bytes": 0.0})
+        b = c3.get(k, {"count": 0, "traffic_bytes": 0.0})
+        colls[k] = {
+            "count": round(ev(a["count"], b["count"])),
+            "traffic_bytes": ev(a["traffic_bytes"], b["traffic_bytes"]),
+        }
+    return {
+        "flops": ev(fl2, fl3),
+        "bytes": ev(by2, by3),
+        "collectives": colls,
+        "points": [fl2, fl3],
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, parallel_overrides=None,
+             out_path: Path | None = None, verbose: bool = True,
+             analysis: bool | None = None, model_overrides=None):
+    import jax
+    from repro.configs import ParallelConfig, get_config, get_shape, supports_shape
+    from repro.distributed.steps import make_step
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if model_overrides:
+        cfg = dataclasses.replace(cfg, **model_overrides)
+    shape = get_shape(shape_name)
+    if not supports_shape(cfg, shape):
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "skipped": True,
+                  "reason": f"{shape_name} requires sub-quadratic state; "
+                            f"{cfg.family} arch is full-attention (DESIGN.md)"}
+        if out_path:
+            out_path.write_text(json.dumps(result, indent=1))
+        return result
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    parallel = ParallelConfig(**(parallel_overrides or {}))
+
+    t0 = time.time()
+    bundle = make_step(cfg, mesh, parallel, shape)
+    with mesh:
+        lowered = bundle.fn.lower(*bundle.abstract_args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    pod_size = 256
+    colls = parse_collectives(text, pod_size)
+    n_dev = mesh.devices.size
+
+    ici = sum(c["traffic_bytes"] for c in colls if not c["dcn"])
+    dcn = sum(c["traffic_bytes"] for c in colls if c["dcn"])
+    by_op = {}
+    for c in colls:
+        k = c["op"] + ("_dcn" if c["dcn"] else "")
+        d = by_op.setdefault(k, {"count": 0, "traffic_bytes": 0.0})
+        d["count"] += 1
+        d["traffic_bytes"] += c["traffic_bytes"]
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "n_devices": n_dev,
+        "parallel": dataclasses.asdict(parallel),
+        "model_overrides": model_overrides or {},
+        "skipped": False,
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": {
+            "per_op": by_op,
+            "ici_traffic_bytes_per_device": ici,
+            "dcn_traffic_bytes_per_device": dcn,
+            "n_collective_ops": len(colls),
+        },
+        "model": {
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        },
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    # exact per-layer-extrapolated analysis (roofline inputs) — single-pod only
+    if analysis is None:
+        analysis = not multi
+    if analysis:
+        t2 = time.time()
+        result["analysis"] = analysis_pass(cfg, shape, mesh, parallel)
+        ici_x = sum(v["traffic_bytes"]
+                    for k, v in result["analysis"]["collectives"].items()
+                    if not k.endswith("_dcn"))
+        dcn_x = sum(v["traffic_bytes"]
+                    for k, v in result["analysis"]["collectives"].items()
+                    if k.endswith("_dcn"))
+        result["analysis"]["ici_traffic_bytes_per_device"] = ici_x
+        result["analysis"]["dcn_traffic_bytes_per_device"] = dcn_x
+        result["timing"]["analysis_s"] = time.time() - t2
+    if out_path:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(result, indent=1))
+    if verbose:
+        print(json.dumps({k: result[k] for k in
+                          ("arch", "shape", "mesh", "flops_per_device",
+                           "bytes_accessed_per_device")}, indent=1))
+        print("memory:", result["memory"])
+        print("collectives:", result["collectives"]["per_op"])
+    return result
+
+
+def _jit_kwargs(bundle):  # pragma: no cover - placeholder for symmetry
+    return {}
+
+
+def cell_path(arch, shape, mesh_kind, tag="baseline"):
+    return ART_DIR / f"{arch}__{shape}__{mesh_kind}__{tag}.json"
+
+
+_CELL_ORDER = [  # cheap/dense first so most of the table lands early;
+                 # SSM/hybrid (slowest XLA:CPU compiles) last
+    "internvl2-1b", "whisper-medium", "qwen3-8b", "codeqwen1.5-7b",
+    "granite-3-8b", "minitron-8b", "qwen2-moe-a2.7b",
+    "llama4-maverick-400b-a17b", "falcon-mamba-7b", "zamba2-7b",
+]
+
+
+def all_cells():
+    from repro.configs import SHAPES
+    for arch in _CELL_ORDER:
+        for shape in SHAPES:
+            for mesh_kind in ("single", "multi"):
+                yield arch, shape, mesh_kind
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--parallel", default=None,
+                    help="JSON dict of ParallelConfig overrides")
+    ap.add_argument("--model", default=None,
+                    help="JSON dict of ModelConfig overrides (perf knobs)")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+    overrides = json.loads(args.parallel) if args.parallel else None
+    m_overrides = json.loads(args.model) if args.model else None
+
+    if args.all:
+        failures = []
+        for arch, shape, mesh_kind in all_cells():
+            out = cell_path(arch, shape, mesh_kind, args.tag)
+            if out.exists() and not args.force:
+                print(f"skip (cached): {out.name}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--tag", args.tag]
+            if args.parallel:
+                cmd += ["--parallel", args.parallel]
+            print(f"=== {arch} × {shape} × {mesh_kind}", flush=True)
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout)
+                if r.returncode != 0:
+                    failures.append((arch, shape, mesh_kind))
+            except subprocess.TimeoutExpired:
+                failures.append((arch, shape, mesh_kind, "timeout"))
+        if failures:
+            print("FAILED CELLS:", failures)
+            sys.exit(1)
+        print("all cells OK")
+        return
+
+    out = cell_path(args.arch, args.shape, args.mesh, args.tag)
+    run_cell(args.arch, args.shape, args.mesh, overrides, out,
+             model_overrides=m_overrides)
+
+
+if __name__ == "__main__":
+    main()

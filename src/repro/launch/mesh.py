@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (16, 16) = 256 chips, axes
+('data','model').  Multi-pod: (2, 16, 16) = 512 chips, axes
+('pod','data','model') — the 'pod' axis crosses DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices are available — used by
+    tests, benches and the runtime's sub-mesh communicators."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    devs = jax.devices()[: data * model]
+    import numpy as np
+    arr = np.array(devs).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))

@@ -1,0 +1,16 @@
+from repro.models.registry import (
+    ModelApi,
+    decode_batch_shapes,
+    eval_cache_shape,
+    eval_params_shape,
+    get_model,
+    make_concrete_batch,
+    prefill_batch_shapes,
+    train_batch_shapes,
+)
+
+__all__ = [
+    "ModelApi", "get_model", "train_batch_shapes", "decode_batch_shapes",
+    "prefill_batch_shapes", "make_concrete_batch", "eval_params_shape",
+    "eval_cache_shape",
+]

@@ -1,0 +1,213 @@
+"""Attention: GQA with RoPE and optional qk-norm.
+
+Three execution paths, mathematically identical:
+  * ``attend_full``      — naive softmax attention (small seq / oracle)
+  * ``attend_blockwise`` — flash-style online-softmax over KV blocks in pure
+                           jnp (train/prefill default; this is also the
+                           mathematical spec of the Pallas kernel)
+  * kernels/flash_attention — the Pallas TPU kernel (validated vs ref)
+
+Decode path attends one new token against a padded KV cache with per-batch
+lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard_heads, shard_tokens
+from repro.models.layers import apply_rope, dense_init, rms_norm, rope_sincos
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, d_model, n_heads, n_kv_heads, head_dim, qk_norm, dtype):
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(kq, (d_model, n_heads, head_dim), dtype),
+        "wk": dense_init(kk, (d_model, n_kv_heads, head_dim), dtype),
+        "wv": dense_init(kv, (d_model, n_kv_heads, head_dim), dtype),
+        "wo": dense_init(ko, (n_heads, head_dim, d_model), dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def qkv_project(p, x, positions, theta, qk_norm, norm_eps):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,K,hd) with RoPE applied."""
+    q = shard_heads(jnp.einsum("bsd,dhk->bshk", x, p["wq"]))
+    k = shard_heads(jnp.einsum("bsd,dhk->bshk", x, p["wk"]))
+    v = shard_heads(jnp.einsum("bsd,dhk->bshk", x, p["wv"]))
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"], norm_eps)
+        k = rms_norm(k, p["k_norm"], norm_eps)
+    sin, cos = rope_sincos(positions, q.shape[-1], theta)
+    return apply_rope(q, sin, cos), apply_rope(k, sin, cos), v
+
+
+def _group(q, n_kv):
+    """(B,S,H,hd) -> (B,S,K,G,hd)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def attend_full(q, k, v, *, causal=True, kv_valid=None):
+    """Naive attention. q (B,Sq,H,hd), k/v (B,Sk,K,hd)."""
+    n_kv = k.shape[2]
+    qg = _group(q, n_kv)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    if causal:
+        # query i may attend key j iff j <= i + (Sk - Sq)  (aligned suffixes)
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        kj = jnp.arange(sk)[None, :]
+        scores = jnp.where(kj <= qi, scores, NEG_INF)
+    if kv_valid is not None:  # (B, Sk) bool
+        scores = jnp.where(kv_valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(q.shape)
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps blocking exact for
+    lengths like 4352 = 4096 tokens + 256 VLM patches)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def attend_blockwise(q, k, v, *, causal=True, q_block=512, kv_block=512,
+                     causal_skip=False, unroll=1):
+    """Flash-style online-softmax attention in pure jnp.
+
+    Scans KV blocks per query block carrying (m, l, acc). ``causal_skip``
+    replaces the masked full (i,j) sweep with a triangular (j<=i) pair scan —
+    the beyond-paper optimization that halves attention FLOPs (see §Perf).
+    """
+    b, sq, h, hd = q.shape
+    sk, n_kv = k.shape[1], k.shape[2]
+    g = h // n_kv
+    q_block = _pick_block(sq, q_block)
+    kv_block = _pick_block(sk, kv_block)
+    tq, tk = sq // q_block, sk // kv_block
+    scale = hd ** -0.5
+
+    qg = _group(q, n_kv).reshape(b, tq, q_block, n_kv, g, hd)
+    kb = k.reshape(b, tk, kv_block, n_kv, hd)
+    vb = v.reshape(b, tk, kv_block, n_kv, hd)
+    offset = sk - sq  # suffix alignment for causal masking
+
+    def block_scores(qi, kj, i, j):
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qi, kj).astype(jnp.float32) * scale
+        if causal:
+            rows = i * q_block + jnp.arange(q_block)[:, None] + offset
+            cols = j * kv_block + jnp.arange(kv_block)[None, :]
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        return s
+
+    def online(carry, s, vj):
+        m, l, acc = carry
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqt,btkd->bkgqd", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return m_new, l, acc
+
+    def per_qblock(i, qi):
+        m0 = jnp.full((b, n_kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, q_block, hd), jnp.float32)
+
+        if causal and causal_skip:
+            if unroll is True and isinstance(i, int):
+                # analysis/unrolled mode: statically skip j > i blocks so the
+                # HLO contains ONLY the upper-triangular work (measurable)
+                carry = (m0, l0, a0)
+                for j in range(i + 1):
+                    carry = online(carry, block_scores(qi, kb[:, j], i, j),
+                                   vb[:, j])
+                m, l, acc = carry
+            else:
+                # runtime mode: lax.cond skips masked blocks' compute on TPU
+                def body(carry, j):
+                    def do(c):
+                        return online(c, block_scores(qi, kb[:, j], i, j), vb[:, j])
+                    carry = jax.lax.cond(j <= i, do, lambda c: c, carry)
+                    return carry, None
+                (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                              jnp.arange(tk), unroll=unroll)
+        else:
+            def body(carry, jkv):
+                j, kj, vj = jkv
+                return online(carry, block_scores(qi, kj, i, j), vj), None
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0),
+                (jnp.arange(tk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)),
+                unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (b,k,g,q,d) -> (b,q,k,g,d) -> (b,q,h,d)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, q_block, h, hd)
+
+    if causal and causal_skip and unroll is True:
+        outs = jnp.stack([per_qblock(i, qg[:, i]) for i in range(tq)])
+    else:
+        def scan_q(_, iq):
+            i, qi = iq
+            return None, per_qblock(i, qi)
+
+        _, outs = jax.lax.scan(scan_q, None,
+                               (jnp.arange(tq), jnp.moveaxis(qg, 1, 0)),
+                               unroll=unroll)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attend_decode(q, k_cache, v_cache, lengths):
+    """q (B,1,H,hd) new-token queries vs padded cache (B,Smax,K,hd).
+    lengths (B,) = number of valid cache entries (including the new token)."""
+    n_kv = k_cache.shape[2]
+    b, _, h, hd = q.shape
+    qg = q.reshape(b, n_kv, h // n_kv, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(k_cache.shape[1])[None, :] < lengths[:, None]  # (B,Smax)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, positions):
+    """Insert one token per sequence at ``positions`` (B,)."""
+    b = k_new.shape[0]
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, positions].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, positions].set(v_new[:, 0].astype(v_cache.dtype))
+    return k_cache, v_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnMode:
+    """How the attention core executes (wired from ModelConfig / ParallelConfig)."""
+    kind: str = "blockwise"   # full | blockwise
+    q_block: int = 512
+    kv_block: int = 512
+    causal_skip: bool = False
+    unroll: bool = False      # analysis mode (see launch/dryrun.py)
+
+
+def attend(q, k, v, *, causal, mode: AttnMode):
+    if mode.kind == "full" or q.shape[1] <= mode.q_block:
+        return attend_full(q, k, v, causal=causal)
+    return attend_blockwise(q, k, v, causal=causal, q_block=mode.q_block,
+                            kv_block=mode.kv_block, causal_skip=mode.causal_skip,
+                            unroll=True if mode.unroll else 1)

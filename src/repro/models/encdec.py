@@ -1,0 +1,200 @@
+"""Whisper-style encoder-decoder.  The conv/log-mel frontend is a STUB per the
+assignment: ``batch["frames"]`` carries precomputed frame embeddings
+(B, n_frames, d_model).  Sinusoidal absolute positions (no 32k learned table —
+documented adaptation).  Decoder layers: causal self-attn (KV cache) +
+cross-attn (encoder KV computed once at prefill) + MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard_heads, shard_tokens
+from repro.models import attention as attn
+from repro.models.attention import AttnMode
+from repro.models.layers import (
+    cross_entropy_loss, dense_init, embed_apply, embed_init, logits_apply,
+    maybe_remat, mlp_apply, mlp_init, rms_norm, scan_unroll, sinusoidal_positions,
+    _cache_dtype,
+)
+
+
+def _xattn_init(rng, cfg, dtype):
+    return attn.attn_init(rng, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                          cfg.head_dim, False, dtype)
+
+
+def init(rng, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kenc, kdec = jax.random.split(rng, 3)
+
+    def enc_layer(r):
+        r1, r2 = jax.random.split(r)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.attn_init(r1, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                                   cfg.head_dim, False, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": mlp_init(r2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_layer(r):
+        r1, r2, r3 = jax.random.split(r, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "self": attn.attn_init(r1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, False, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "cross": _xattn_init(r2, cfg, dtype),
+            "ln3": jnp.ones((cfg.d_model,), dtype),
+            "mlp": mlp_init(r3, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    enc = jax.vmap(enc_layer)(jax.random.split(kenc, cfg.n_encoder_layers))
+    dec = jax.vmap(dec_layer)(jax.random.split(kdec, cfg.n_layers))
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype, cfg.tie_embeddings),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def _posenc(x):
+    pe = sinusoidal_positions(x.shape[1], x.shape[2]).astype(x.dtype)
+    return x + pe[None]
+
+
+def encode(params, cfg, frames, mode: AttnMode = AttnMode()):
+    x = _posenc(frames.astype(jnp.dtype(cfg.dtype)))
+
+    def body(xx, lp):
+        h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+        q = shard_heads(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"]))
+        k = shard_heads(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"]))
+        v = shard_heads(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"]))
+        o = attn.attend(q, k, v, causal=False, mode=mode)
+        xx = xx + shard_tokens(jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"]))
+        h = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+        return xx + mlp_apply(lp["mlp"], h), None
+
+    fn = maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(fn, x, params["encoder"], unroll=scan_unroll(cfg))
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out):
+    k = shard_heads(jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"]))
+    v = shard_heads(jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"]))
+    return k, v
+
+
+def _dec_layer(lp, x, enc_out, cfg, mode, self_kv=None, write_pos=None,
+               cross_kv=None):
+    """One decoder layer; decode mode when self_kv (cache tensors) given."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if self_kv is None:
+        b, s, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q, k, v = attn.qkv_project(lp["self"], h, pos, cfg.rope_theta, False,
+                                   cfg.norm_eps)
+        o = attn.attend(q, k, v, causal=True, mode=mode)
+        new_self = (k, v)
+    else:
+        q, k, v = attn.qkv_project(lp["self"], h, write_pos[:, None],
+                                   cfg.rope_theta, False, cfg.norm_eps)
+        ck, cv = attn.cache_update(self_kv[0], self_kv[1], k, v, write_pos)
+        o = attn.attend_decode(q, ck, cv, write_pos + 1)
+        new_self = (ck, cv)
+    x = x + shard_tokens(jnp.einsum("bshk,hkd->bsd", o, lp["self"]["wo"]))
+
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    q = shard_heads(jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"]))
+    if cross_kv is None:
+        ek, ev = _cross_kv(lp, enc_out)
+    else:
+        ek, ev = cross_kv
+    if self_kv is None:
+        o = attn.attend(q, ek, ev, causal=False, mode=mode)
+    else:
+        lengths = jnp.full((q.shape[0],), ek.shape[1], jnp.int32)
+        o = attn.attend_decode(q, ek, ev, lengths)
+    x = x + shard_tokens(jnp.einsum("bshk,hkd->bsd", o, lp["cross"]["wo"]))
+
+    h = rms_norm(x, lp["ln3"], cfg.norm_eps)
+    return x + mlp_apply(lp["mlp"], h), new_self
+
+
+def forward(params, cfg, batch, mode: AttnMode = AttnMode()):
+    """batch: frames (B,F,d), tokens (B,S) -> logits (B,S,V)."""
+    enc_out = encode(params, cfg, batch["frames"], mode)
+    x = _posenc(embed_apply(params["embed"], batch["tokens"]))
+
+    def body(xx, lp):
+        xx, _ = _dec_layer(lp, xx, enc_out, cfg, mode)
+        return xx, None
+
+    fn = maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(fn, x, params["decoder"], unroll=scan_unroll(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_apply(params["embed"], x, cfg.tie_embeddings)
+
+
+def loss_fn(params, cfg, batch, mode: AttnMode = AttnMode()):
+    logits = forward(params, cfg, batch, mode)
+    return cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                              batch.get("loss_mask"))
+
+
+def cache_init(cfg, batch_size: int, smax: int, dtype=None):
+    dtype = dtype or _cache_dtype(cfg)
+    L = cfg.n_layers
+    self_shape = (L, batch_size, smax, cfg.n_kv_heads, cfg.head_dim)
+    cross_shape = (L, batch_size, cfg.n_encoder_frames, cfg.n_heads, cfg.head_dim)
+    return {"k": jnp.zeros(self_shape, dtype), "v": jnp.zeros(self_shape, dtype),
+            "xk": jnp.zeros(cross_shape, dtype), "xv": jnp.zeros(cross_shape, dtype)}
+
+
+def prefill(params, cfg, batch, smax: int, mode: AttnMode = AttnMode()):
+    enc_out = encode(params, cfg, batch["frames"], mode)
+    x = _posenc(embed_apply(params["embed"], batch["tokens"]))
+    b, s, _ = x.shape
+    cache = cache_init(cfg, b, smax)
+
+    def body(xx, lp):
+        xx, (k, v) = _dec_layer(lp, xx, enc_out, cfg, mode)
+        xk, xv = _cross_kv(lp, enc_out)
+        return xx, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["decoder"],
+                                         unroll=scan_unroll(cfg))
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+    cache["xk"] = xks.astype(cache["xk"].dtype)
+    cache["xv"] = xvs.astype(cache["xv"].dtype)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return cache, logits_apply(params["embed"], x, cfg.tie_embeddings)[:, 0]
+
+
+def decode_step(params, cfg, batch, cache):
+    tokens, positions = batch["tokens"], batch["positions"]
+    x = embed_apply(params["embed"], tokens)
+    pe = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + pe[positions][:, None].astype(x.dtype)
+
+    def body(xx, xs):
+        lp, ck, cv, xk, xv = xs
+        xx, (nk, nv) = _dec_layer(lp, xx, None, cfg, AttnMode(),
+                                  self_kv=(ck, cv), write_pos=positions,
+                                  cross_kv=(xk, xv))
+        return xx, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]), unroll=scan_unroll(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_apply(params["embed"], x, cfg.tie_embeddings)[:, 0]
+    return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}

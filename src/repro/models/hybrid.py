@@ -1,0 +1,196 @@
+"""Zamba2-style hybrid: a stack of Mamba2 blocks with ONE shared
+attention+MLP transformer block (single weight copy) applied every
+``cfg.shared_attn_period`` blocks.
+
+Layout: n_layers = G groups × P layers (P = shared_attn_period).  Each group
+starts with the shared block application (its own KV cache slot), followed by
+P Mamba2 blocks.  Outer scan over groups, inner scan over the group's Mamba2
+layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard_tokens
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.attention import AttnMode
+from repro.models.layers import (
+    cross_entropy_loss, embed_apply, embed_init, logits_apply,
+    maybe_remat, mlp_apply, mlp_init, rms_norm, scan_unroll, _cache_dtype,
+)
+
+
+def _groups(cfg):
+    p = cfg.shared_attn_period
+    assert p > 0 and cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return cfg.n_layers // p, p
+
+
+def init(rng, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, ks, ka, km = jax.random.split(rng, 4)
+    G, P = _groups(cfg)
+
+    def ssm_layer(r):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                **ssm.mamba2_init(r, cfg, dtype)}
+
+    layers = jax.vmap(ssm_layer)(jax.random.split(ks, G * P))
+    layers = jax.tree.map(lambda a: a.reshape((G, P) + a.shape[1:]), layers)
+
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, False, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype, cfg.tie_embeddings),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "shared": shared,
+        "layers": layers,
+    }
+
+
+def _shared_block(shared, x, positions, cfg, mode, cache=None, write_pos=None):
+    h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(shared["attn"], h, positions, cfg.rope_theta,
+                               False, cfg.norm_eps)
+    if cache is None:
+        o = attn.attend(q, k, v, causal=True, mode=mode)
+        new_cache = (k, v)
+    else:
+        ck, cv = attn.cache_update(cache[0], cache[1], k, v, write_pos)
+        o = attn.attend_decode(q, ck, cv, write_pos + 1)
+        new_cache = (ck, cv)
+    x = x + shard_tokens(jnp.einsum("bshk,hkd->bsd", o, shared["attn"]["wo"]))
+    h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+    return x + mlp_apply(shared["mlp"], h), new_cache
+
+
+def _group_fwd(shared, glayers, x, positions, cfg, mode):
+    x, kv = _shared_block(shared, x, positions, cfg, mode)
+
+    def body(xx, lp):
+        h = rms_norm(xx, lp["ln"], cfg.norm_eps)
+        return xx + ssm.mamba2_apply(lp, h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, glayers, unroll=scan_unroll(cfg))
+    return x, kv
+
+
+def forward(params, cfg, batch, mode: AttnMode = AttnMode()):
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def gbody(xx, glayers):
+        fn = maybe_remat(
+            lambda xc, gl: _group_fwd(params["shared"], gl, xc, positions, cfg, mode),
+            cfg)
+        xx, _ = fn(xx, glayers)
+        return xx, None
+
+    x, _ = jax.lax.scan(gbody, x, params["layers"], unroll=scan_unroll(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_apply(params["embed"], x, cfg.tie_embeddings)
+
+
+def loss_fn(params, cfg, batch, mode: AttnMode = AttnMode()):
+    logits = forward(params, cfg, batch, mode)
+    return cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                              batch.get("loss_mask"))
+
+
+# ----------------------------------------------------------------------------
+# cache: per-group shared-attn KV + per-layer mamba2 state
+# ----------------------------------------------------------------------------
+def cache_init(cfg, batch_size: int, smax: int, dtype=None):
+    dtype = dtype or _cache_dtype(cfg)
+    G, P = _groups(cfg)
+    kvshape = (G, batch_size, smax, cfg.n_kv_heads, cfg.head_dim)
+    st = ssm.mamba2_state_init(batch_size, cfg, dtype)
+    return {
+        "k": jnp.zeros(kvshape, dtype),
+        "v": jnp.zeros(kvshape, dtype),
+        "ssm": jax.tree.map(
+            lambda a: jnp.zeros((G, P) + a.shape, a.dtype), st),
+    }
+
+
+def prefill(params, cfg, batch, smax: int, mode: AttnMode = AttnMode()):
+    """Prompt pass producing decode state.  For the SSM layers we run the
+    chunked scan and keep only the final state; shared-attn KV is padded into
+    the cache."""
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cache = cache_init(cfg, b, smax)
+
+    def gbody(xx, xs):
+        glayers, _ = xs
+        xx, (k, v) = _shared_block(params["shared"], xx, positions, cfg, mode)
+
+        def lbody(xc, lp):
+            h = rms_norm(xc, lp["ln"], cfg.norm_eps)
+            # full apply; recompute final state via one-chunk scan on the fly
+            y = ssm.mamba2_apply(lp, h, cfg)
+            # final ssm state: rerun split to get state (cheap relative to apply)
+            z, xbc, dt = ssm._mamba2_split(lp, h, cfg)
+            xbc_conv = jax.nn.silu(ssm._causal_conv(xbc, lp["conv_w"], lp["conv_b"]))
+            a, bb, _, _ = ssm._mamba2_ssm(lp, xbc_conv, dt, cfg)
+            h0 = jnp.zeros((b, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+            _, hfin = ssm._assoc_scan_chunked(
+                jnp.broadcast_to(a[..., None, None], bb.shape), bb, h0, cfg.ssm_chunk,
+                unroll=True if cfg.unroll_scans else 1)
+            km1 = cfg.ssm_conv - 1
+            xbp = jnp.pad(xbc, ((0, 0), (max(km1 - xbc.shape[1], 0), 0), (0, 0)))
+            conv_fin = xbp[:, -km1:, :]
+            return xc + y, {"conv": conv_fin.astype(cache["ssm"]["conv"].dtype), "h": hfin}
+
+        xx, states = jax.lax.scan(lbody, xx, glayers, unroll=scan_unroll(cfg))
+        return xx, (k, v, states)
+
+    x, (ks, vs, states) = jax.lax.scan(gbody, x,
+                                       (params["layers"], jnp.arange(_groups(cfg)[0])),
+                                       unroll=scan_unroll(cfg))
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+    cache["ssm"] = states
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return cache, logits_apply(params["embed"], x, cfg.tie_embeddings)[:, 0]
+
+
+def decode_step(params, cfg, batch, cache):
+    tokens, positions = batch["tokens"], batch["positions"]
+    x = embed_apply(params["embed"], tokens)
+
+    def gbody(xx, xs):
+        glayers, ck, cv, gstate = xs
+        xx, (nk, nv) = _shared_block(params["shared"], xx, positions[:, None],
+                                     cfg, AttnMode(), cache=(ck, cv),
+                                     write_pos=positions)
+
+        def lbody(xc, lxs):
+            lp, lstate = lxs
+            h = rms_norm(xc, lp["ln"], cfg.norm_eps)
+            y, nstate = ssm.mamba2_decode(lp, h, lstate, cfg)
+            return xc + y, nstate
+
+        xx, nstates = jax.lax.scan(lbody, xx, (glayers, gstate),
+                                   unroll=scan_unroll(cfg))
+        return xx, (nk, nv, nstates)
+
+    x, (nk, nv, nstates) = jax.lax.scan(
+        gbody, x, (params["layers"], cache["k"], cache["v"], cache["ssm"]),
+        unroll=scan_unroll(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_apply(params["embed"], x, cfg.tie_embeddings)[:, 0]
+    return logits, {"k": nk, "v": nv, "ssm": nstates}

@@ -1,0 +1,133 @@
+"""Shared layers: norms, rotary embeddings, SwiGLU MLP, embedding, loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.context import shard_ff, shard_tokens
+
+
+def maybe_remat(fn, cfg):
+    """Rematerialization policy for the layer scan body (perf knob)."""
+    mode = getattr(cfg, "remat_mode", "dots")
+    if not cfg.remat or mode == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if mode == "nothing"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def scan_unroll(cfg):
+    """lax.scan unroll amount: full unroll in analysis mode so XLA cost
+    analysis counts every layer/chunk (scan bodies are otherwise counted
+    once — see launch/dryrun.py)."""
+    return True if getattr(cfg, "unroll_scans", False) else 1
+
+
+def _cache_dtype(cfg):
+    """KV/state cache dtype follows the model compute dtype."""
+    return jnp.dtype(cfg.dtype)
+
+
+def truncated_normal_init(rng, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def dense_init(rng, d_in_shape, dtype):
+    """He-style init where fan_in is the product of all leading dims but the last."""
+    fan_in = int(np.prod(d_in_shape[:-1])) if len(d_in_shape) > 1 else d_in_shape[0]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(rng, d_in_shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings (rotate-half / NeoX convention)
+# ----------------------------------------------------------------------------
+def rope_sincos(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 -> sin, cos of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, n_heads, head_dim); sin/cos: (..., S, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]  # broadcast over heads axis
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d_model: int):
+    """Classic transformer sin/cos absolute position table (no params)."""
+    pos = np.arange(n_pos)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    angle = pos / np.power(10000.0, dim / d_model)
+    table = np.zeros((n_pos, d_model), np.float32)
+    table[:, 0::2] = np.sin(angle)
+    table[:, 1::2] = np.cos(angle)
+    return jnp.asarray(table)
+
+
+# ----------------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------------
+def mlp_init(rng, d_model: int, d_ff: int, dtype):
+    kg, ki, ko = jax.random.split(rng, 3)
+    return {
+        "wg": dense_init(kg, (d_model, d_ff), dtype),
+        "wi": dense_init(ki, (d_model, d_ff), dtype),
+        "wo": dense_init(ko, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(p, x):
+    g = shard_ff(jax.nn.silu(jnp.einsum("...d,df->...f", x, p["wg"])))
+    u = shard_ff(jnp.einsum("...d,df->...f", x, p["wi"]))
+    return shard_tokens(jnp.einsum("...f,fd->...d", g * u, p["wo"]))
+
+
+# ----------------------------------------------------------------------------
+# Embedding + LM head + loss
+# ----------------------------------------------------------------------------
+def embed_init(rng, vocab: int, d_model: int, dtype, tie: bool):
+    ke, kh = jax.random.split(rng)
+    p = {"embedding": truncated_normal_init(ke, (vocab, d_model), 1.0, dtype)}
+    if not tie:
+        p["lm_head"] = dense_init(kh, (d_model, vocab), dtype)
+    return p
+
+
+def embed_apply(p, tokens):
+    return shard_tokens(jnp.take(p["embedding"], tokens, axis=0))
+
+
+def logits_apply(p, x, tie: bool):
+    if tie:
+        return shard_ff(jnp.einsum("...d,vd->...v", x, p["embedding"]))
+    return shard_ff(jnp.einsum("...d,dv->...v", x, p["lm_head"]))
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean token-level CE. logits (..., V) any float dtype; stable in f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

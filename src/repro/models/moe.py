@@ -1,0 +1,199 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+Baseline (paper-era) path: dense routing → sort-based slotting → scatter into
+an (E, C, d) buffer → batched expert SwiGLU → gather-combine.  FLOPs are
+O(top_k · tokens · d · f) plus routing; the dispatch itself is gather/scatter
+(no one-hot einsum blow-up).  Expert weights carry an 'expert' leading axis
+that the sharding rules map to the 'model' mesh axis (EP).
+
+``moe_ffn`` is pure jnp (GSPMD decides dispatch comms).  The §Perf pass adds a
+replicated-activation EP variant that removes the scatter/gather resharding —
+see distributed/steps.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+
+def moe_init(rng, cfg, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    keys = jax.random.split(rng, 6)
+    p = {
+        "router": dense_init(keys[0], (d, E), jnp.float32),
+        "wg": dense_init(keys[1], (E, d, f), dtype),
+        "wi": dense_init(keys[2], (E, d, f), dtype),
+        "wo": dense_init(keys[3], (E, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(keys[4], d, cfg.n_shared_experts * f, dtype)
+        p["shared_gate"] = dense_init(keys[5], (d, 1), jnp.float32)
+    return p
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def route(p, x, cfg):
+    """x (T, d) -> (expert_idx (T,k), gates (T,k) f32)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(gates_all, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return idx, gates
+
+
+def dispatch_indices(expert_idx, n_experts: int, cap: int):
+    """Flattened (T*k,) expert assignment -> (expert, position) pairs.
+    Positions >= cap are overflow (dropped by scatter/gather OOB modes).
+    Stable within expert (sorted order)."""
+    flat_e = expert_idx.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)              # token-pairs grouped by e
+    sorted_e = flat_e[order]
+    # position within the expert's group
+    start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    pos_sorted = jnp.arange(flat_e.shape[0]) - start[sorted_e]
+    # undo the sort: position for pair i
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    return flat_e, pos  # (T*k,), (T*k,)
+
+
+def moe_ffn(p, x, cfg):
+    """x (..., d) -> (..., d). Flattens all leading dims into tokens.
+
+    Dispatch is a 2D scatter into an (E, C, d) buffer constrained to
+    P('model','data',None): experts over TP (EP) *and* capacity over DP —
+    without the capacity constraint GSPMD replicates the expert matmuls
+    across the data axis (observed 16x FLOP blowup in the dry-run)."""
+    from repro.distributed.context import current_mesh, current_moe_impl
+    mesh = current_mesh()
+    if current_moe_impl() == "shardmap" and mesh is not None:
+        return moe_ffn_shardmap(p, x, cfg, mesh)
+
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(T, cfg)
+
+    idx, gates = route(p, xt, cfg)                        # (T,k)
+    e_of_pair, pos_of_pair = dispatch_indices(idx, E, C)  # (T*k,)
+    token_of_pair = jnp.repeat(jnp.arange(T), k)
+
+    # scatter tokens into the expert buffer (positions >= C are dropped)
+    ebuf = jnp.zeros((E, C, d), xt.dtype)
+    ebuf = ebuf.at[e_of_pair, pos_of_pair].set(xt[token_of_pair], mode="drop")
+    ebuf = constrain(ebuf, "model", "data", None)
+
+    # batched expert SwiGLU.  Weights are ZeRO-3/FSDP-sharded on d over
+    # 'data'; gather them here (per layer, under scan) so the matmul shards
+    # as (e->model, c->data) — otherwise GSPMD replicates the capacity dim
+    # across 'data' instead (16x FLOP blowup, observed in the dry-run).
+    wg = constrain(p["wg"], "model", None, None)
+    wi = constrain(p["wi"], "model", None, None)
+    wo = constrain(p["wo"], "model", None, None)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ebuf, wg))
+    u = jnp.einsum("ecd,edf->ecf", ebuf, wi)
+    eout = jnp.einsum("ecf,efd->ecd", g * u, wo)
+    eout = constrain(eout, "model", "data", None)
+
+    # combine: gather each pair's expert output (OOB -> 0), weight by gate
+    pair_out = eout.at[e_of_pair, pos_of_pair].get(mode="fill", fill_value=0)
+    pair_gate = gates.reshape(-1, 1).astype(pair_out.dtype)
+    out = jnp.zeros_like(xt).at[token_of_pair].add(pair_out * pair_gate)
+
+    if cfg.n_shared_experts:
+        sg = jax.nn.sigmoid(
+            jnp.einsum("td,do->to", xt.astype(jnp.float32), p["shared_gate"]))
+        out = out + (mlp_apply(p["shared"], xt) * sg.astype(out.dtype))
+    return out.reshape(lead + (d,))
+
+
+def moe_ffn_shardmap(p, x, cfg, mesh):
+    """Local-expert EP MoE under shard_map — the beyond-baseline dispatch
+    (EXPERIMENTS.md §Perf, llama4 cell).
+
+    Formulation: activations stay batch-sharded over DP and REPLICATED over
+    the 'model' axis; each model-rank owns E/tp experts and locally selects +
+    processes only the token-pairs routed to *its* experts; the partial
+    outputs (disjoint token sets per rank) are combined with ONE psum over
+    'model' — the same collective a dense TP FFN pays.  This removes the
+    full-buffer all-reduces GSPMD emits for the scatter-based dispatch
+    (observed ~10x collective-traffic reduction on llama4 train_4k).
+    """
+    from jax.sharding import PartitionSpec as PS
+
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    E, k = cfg.n_experts, cfg.top_k
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tpn = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    el = E // tpn
+
+    def local_ffn(xt_l, router, wg_l, wi_l, wo_l):
+        t_loc = xt_l.shape[0]
+        cap = capacity(t_loc, cfg)
+        logits = jnp.einsum("td,de->te", xt_l.astype(jnp.float32), router)
+        gates_all = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(gates_all, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        m = jax.lax.axis_index("model") if tpn > 1 else 0
+        lo = m * el
+        # map global expert ids to local slots; foreign experts -> OOB drop
+        e_flat = idx.reshape(-1)
+        local_e = jnp.where((e_flat >= lo) & (e_flat < lo + el),
+                            e_flat - lo, el)
+        _, pos = dispatch_indices(local_e.reshape(-1, 1), el + 1, cap)
+        token_of_pair = jnp.repeat(jnp.arange(t_loc), k)
+        ebuf = jnp.zeros((el, cap, d), xt_l.dtype)
+        ebuf = ebuf.at[local_e, pos].set(xt_l[token_of_pair], mode="drop")
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ebuf, wg_l))
+        u = jnp.einsum("ecd,edf->ecf", ebuf, wi_l)
+        eout = jnp.einsum("ecf,efd->ecd", g * u, wo_l)
+        pair_out = eout.at[local_e, pos].get(mode="fill", fill_value=0)
+        pair_gate = gates.reshape(-1, 1).astype(pair_out.dtype)
+        out = jnp.zeros_like(xt_l).at[token_of_pair].add(pair_out * pair_gate)
+        if tpn > 1:
+            out = jax.lax.psum(out, "model")
+        return out
+
+    wspec = PS("model", None, None) if tpn > 1 else PS(None, None, None)
+    xspec = PS(dp if dp else None, None)
+    out = jax.shard_map(
+        local_ffn, mesh=mesh,
+        in_specs=(xspec, PS(None, None), wspec, wspec,
+                  PS("model", None, None) if tpn > 1 else PS(None, None, None)),
+        out_specs=xspec, check_vma=False,
+    )(xt, p["router"], p["wg"], p["wi"], p["wo"])
+
+    if cfg.n_shared_experts:
+        sg = jax.nn.sigmoid(
+            jnp.einsum("td,do->to", xt.astype(jnp.float32), p["shared_gate"]))
+        out = out + (mlp_apply(p["shared"], xt) * sg.astype(out.dtype))
+    return out.reshape(lead + (d,))
+
+
+def moe_ffn_dense_oracle(p, x, cfg):
+    """O(T·E·d·f) oracle: run every expert on every token, combine by gates
+    (no capacity drops).  Tests compare moe_ffn against this with a generous
+    capacity factor so no token drops."""
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, x.shape[-1])
+    idx, gates = route(p, xt, cfg)
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["wg"]))
+    u = jnp.einsum("td,edf->tef", xt, p["wi"])
+    alle = jnp.einsum("tef,efd->ted", g * u, p["wo"])      # (T,E,d)
+    sel = jnp.take_along_axis(alle, idx[..., None], axis=1)  # (T,k,d)
+    out = (sel * gates[..., None].astype(sel.dtype)).sum(axis=1)
+    if cfg.n_shared_experts:
+        sg = jax.nn.sigmoid(
+            jnp.einsum("td,do->to", xt.astype(jnp.float32), p["shared_gate"]))
+        out = out + (mlp_apply(p["shared"], xt) * sg.astype(out.dtype))
+    return out.reshape(lead + (-1,))

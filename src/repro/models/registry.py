@@ -1,0 +1,94 @@
+"""Uniform model API across families + batch construction helpers.
+
+Every family exposes:  init(rng,cfg) / forward / loss_fn / prefill /
+decode_step / cache_init  with dict batches, so steps, the trainer, the
+serving engine and the dry-run treat all 10 archs identically.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, hybrid, ssm_lm, transformer, vlm
+
+
+class ModelApi(NamedTuple):
+    init: Callable
+    forward: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_init: Callable
+
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": vlm,
+    "ssm": ssm_lm,
+    "hybrid": hybrid,
+    "audio": encdec,
+}
+
+
+def get_model(cfg) -> ModelApi:
+    mod = _FAMILIES[cfg.family]
+    return ModelApi(mod.init, mod.forward, mod.loss_fn, mod.prefill,
+                    mod.decode_step, mod.cache_init)
+
+
+# ----------------------------------------------------------------------------
+# batch builders (concrete arrays for smoke tests / training, and
+# ShapeDtypeStructs for the dry-run via abstract=True)
+# ----------------------------------------------------------------------------
+def train_batch_shapes(cfg, batch: int, seq: int) -> dict[str, Any]:
+    shapes = {
+        "tokens": ((batch, seq), jnp.int32),
+        "labels": ((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        shapes["prefix_embeds"] = ((batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        shapes["frames"] = ((batch, cfg.n_encoder_frames, cfg.d_model), jnp.bfloat16)
+    return shapes
+
+
+def decode_batch_shapes(cfg, batch: int) -> dict[str, Any]:
+    return {
+        "tokens": ((batch, 1), jnp.int32),
+        "positions": ((batch,), jnp.int32),
+    }
+
+
+def prefill_batch_shapes(cfg, batch: int, seq: int) -> dict[str, Any]:
+    shapes = {"tokens": ((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        shapes["prefix_embeds"] = ((batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        shapes["frames"] = ((batch, cfg.n_encoder_frames, cfg.d_model), jnp.bfloat16)
+    return shapes
+
+
+def make_concrete_batch(shapes, rng: np.random.Generator, vocab: int):
+    out = {}
+    for name, (shape, dtype) in shapes.items():
+        if dtype == jnp.int32:
+            hi = vocab if name in ("tokens", "labels") else max(np.prod(shape), 2)
+            out[name] = jnp.asarray(rng.integers(0, hi, size=shape, dtype=np.int32))
+        else:
+            out[name] = jnp.asarray(rng.normal(size=shape), dtype=dtype)
+    return out
+
+
+def eval_params_shape(cfg, rng_seed: int = 0):
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    api = get_model(cfg)
+    return jax.eval_shape(lambda k: api.init(k, cfg), jax.random.key(rng_seed))
+
+
+def eval_cache_shape(cfg, batch: int, smax: int):
+    api = get_model(cfg)
+    return jax.eval_shape(lambda: api.cache_init(cfg, batch, smax))

@@ -1,0 +1,293 @@
+"""State-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+Train/prefill path: chunked associative scan (seq chunks of ``cfg.ssm_chunk``)
+so the (S, d_inner, d_state) tensor is never fully materialized — the pure-jnp
+analogue of the kernels/ssm_scan Pallas kernel (which keeps the carried state
+in VMEM scratch).  Decode path: O(1) recurrent step with (conv_state, h) carried
+in the "cache".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard_tokens
+from repro.models.layers import dense_init, rms_norm
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C), w (K,C), b (C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],  # (K, 1, C) — depthwise via feature_group_count
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def _conv_step(conv_state, x_new, w, b):
+    """conv_state (B,K-1,C), x_new (B,C) -> (y (B,C), new_state)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:, :]
+
+
+def _assoc_scan_fused(a, b, h0, cm, chunk: int, contract, unroll=1):
+    """Like _assoc_scan_chunked but contracts each chunk's states with C
+    immediately (``contract(h_chunk, c_chunk) -> y_chunk``), so the
+    (S, ..., N) state history never exists outside one chunk — the pure-jnp
+    analogue of the ssm_scan Pallas kernel's VMEM-resident state
+    (perf knob ``cfg.fused_ssm_y``; see EXPERIMENTS.md §Perf)."""
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+    ar = a.reshape((B, nc, chunk) + a.shape[2:])
+    br = b.reshape((B, nc, chunk) + b.shape[2:])
+    cr = cm.reshape((B, nc, chunk) + cm.shape[2:])
+
+    def combine(left, right):
+        al, bl = left
+        ar_, br_ = right
+        return ar_ * al, ar_ * bl + br_
+
+    def chunk_body(h, abc):
+        ac, bc, cc = abc
+        pa, pb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = pb + pa * h[:, None]
+        return h_all[:, -1], contract(h_all, cc)
+
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0,
+        (jnp.moveaxis(ar, 1, 0), jnp.moveaxis(br, 1, 0),
+         jnp.moveaxis(cr, 1, 0)), unroll=unroll)
+    ys = jnp.moveaxis(ys, 0, 1).reshape((B, S) + ys.shape[3:])
+    return ys, h_final
+
+
+def _assoc_scan_chunked(a, b, h0, chunk: int, unroll=1):
+    """h_t = a_t * h_{t-1} + b_t over axis=1, chunked.
+
+    a, b: (B, S, ...) f32;  h0: (B, ...) f32.  Returns (h_all (B,S,...), h_final).
+    """
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    while S % chunk:          # largest divisor of S <= requested chunk
+        chunk -= 1
+    nc = S // chunk
+    ar = a.reshape((B, nc, chunk) + a.shape[2:])
+    br = b.reshape((B, nc, chunk) + b.shape[2:])
+
+    def combine(left, right):
+        al, bl = left
+        ar_, br_ = right
+        return ar_ * al, ar_ * bl + br_
+
+    def chunk_body(h, ab):
+        ac, bc = ab  # (B, chunk, ...)
+        pa, pb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = pb + pa * h[:, None]
+        return h_all[:, -1], h_all
+
+    h_final, hs = jax.lax.scan(
+        chunk_body, h0,
+        (jnp.moveaxis(ar, 1, 0), jnp.moveaxis(br, 1, 0)), unroll=unroll)
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, S) + a.shape[2:])
+    return hs, h_final
+
+
+# ============================================================================
+# Mamba1 (falcon-mamba-7b)
+# ============================================================================
+def mamba1_init(rng, cfg, dtype):
+    d, di, st, dtr, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    keys = jax.random.split(rng, 6)
+    A = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(keys[1], (k, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(keys[2], (di, dtr + 2 * st), dtype),
+        "dt_proj": dense_init(keys[3], (dtr, di), dtype),
+        "dt_bias": jnp.full((di,), -2.0, dtype),  # softplus^-1(~0.12)
+        "A_log": jnp.log(A),                       # f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[4], (di, d), dtype),
+    }
+
+
+def _mamba1_ssm_inputs(p, x_conv, cfg):
+    dtr, st = cfg.dt_rank, cfg.ssm_state
+    x_db = jnp.einsum("bsc,ce->bse", x_conv, p["x_proj"])
+    dt, Bm, Cm = jnp.split(x_db, [dtr, dtr + st], axis=-1)
+    dt = _softplus(jnp.einsum("bsr,rc->bsc", dt, p["dt_proj"]).astype(jnp.float32)
+                   + p["dt_bias"].astype(jnp.float32))           # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                     # (di, st)
+    a = jnp.exp(dt[..., None] * A)                               # (B,S,di,st)
+    b = (dt * x_conv.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+    return a, b, Cm
+
+
+def _scan_dtype(cfg):
+    return jnp.dtype(getattr(cfg, "ssm_scan_dtype", "float32"))
+
+
+def mamba1_apply(p, x, cfg, state=None):
+    """x (B,S,d). state: None (train, h0=0) or dict(conv, h) for chunk-carry."""
+    B, S, _ = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    xz = shard_tokens(jnp.einsum("bsd,de->bse", x, p["in_proj"]))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    a, b, Cm = _mamba1_ssm_inputs(p, x_conv, cfg)
+    sdt = _scan_dtype(cfg)
+    a, b = a.astype(sdt), b.astype(sdt)
+    h0 = jnp.zeros((B, di, st), sdt)
+    unroll = True if cfg.unroll_scans else 1
+    if cfg.fused_ssm_y:
+        y, _ = _assoc_scan_fused(
+            a, b, h0, Cm.astype(sdt), cfg.ssm_chunk,
+            lambda hc, cc: jnp.einsum("bscn,bsn->bsc", hc, cc,
+                                      preferred_element_type=jnp.float32),
+            unroll=unroll)
+    else:
+        hs, _ = _assoc_scan_chunked(a, b, h0, cfg.ssm_chunk, unroll=unroll)
+        y = jnp.einsum("bscn,bsn->bsc", hs, Cm.astype(hs.dtype),
+                   preferred_element_type=jnp.float32)
+    y = y + p["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return shard_tokens(jnp.einsum("bsc,cd->bsd", y, p["out_proj"]))
+
+
+def mamba1_decode(p, x, state, cfg):
+    """x (B,1,d); state dict(conv (B,K-1,di), h (B,di,st)) -> (y, state)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _conv_step(state["conv"], x_in, p["conv_w"], p["conv_b"])
+    x_conv = jax.nn.silu(xc)
+    a, b, Cm = _mamba1_ssm_inputs(p, x_conv[:, None, :], cfg)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = jnp.einsum("bcn,bn->bc", h, Cm[:, 0].astype(jnp.float32))
+    y = y + p["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bc,cd->bd", y, p["out_proj"])[:, None, :]
+    return out, {"conv": conv_state, "h": h}
+
+
+def mamba1_state_init(batch, cfg, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ============================================================================
+# Mamba2 (zamba2-7b)
+# ============================================================================
+def mamba2_init(rng, cfg, dtype):
+    d, di, st, nh, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    keys = jax.random.split(rng, 4)
+    conv_ch = di + 2 * st
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di + 2 * st + nh), dtype),
+        "conv_w": dense_init(keys[1], (k, conv_ch), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(keys[2], (di, d), dtype),
+    }
+
+
+def _mamba2_split(p, x, cfg):
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = shard_tokens(jnp.einsum("bsd,de->bse", x, p["in_proj"]))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * st]
+    dt = zxbcdt[..., di + di + 2 * st:]
+    return z, xbc, dt
+
+
+def _mamba2_ssm(p, xbc_conv, dt, cfg):
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xh = xbc_conv[..., :di]
+    Bm = xbc_conv[..., di:di + st].astype(jnp.float32)
+    Cm = xbc_conv[..., di + st:].astype(jnp.float32)
+    dt = _softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                      # (nh,)
+    a = jnp.exp(dt * A)                                           # (B,S,nh)
+    xheads = xh.reshape(xh.shape[:-1] + (nh, hd)).astype(jnp.float32)
+    # b_t = dt * x_t ⊗ B_t : (B,S,nh,hd,st)
+    b = (dt[..., None] * xheads)[..., None] * Bm[:, :, None, None, :]
+    return a, b, Cm, xheads
+
+
+def mamba2_apply(p, x, cfg):
+    B, S, _ = x.shape
+    nh, hd, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xbc, dt = _mamba2_split(p, x, cfg)
+    xbc_conv = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    a, b, Cm, xheads = _mamba2_ssm(p, xbc_conv, dt, cfg)
+    sdt = _scan_dtype(cfg)
+    a, b = a.astype(sdt), b.astype(sdt)
+    Cm = Cm.astype(sdt)
+    h0 = jnp.zeros((B, nh, hd, st), sdt)
+    a_b = jnp.broadcast_to(a[..., None, None], b.shape)
+    unroll = True if cfg.unroll_scans else 1
+    if cfg.fused_ssm_y:
+        y, _ = _assoc_scan_fused(
+            a_b, b, h0, Cm, cfg.ssm_chunk,
+            lambda hc, cc: jnp.einsum("bshdn,bsn->bshd", hc, cc,
+                                      preferred_element_type=jnp.float32),
+            unroll=unroll)
+    else:
+        hs, _ = _assoc_scan_chunked(a_b, b, h0, cfg.ssm_chunk, unroll=unroll)
+        y = jnp.einsum("bshdn,bsn->bshd", hs, Cm,
+                   preferred_element_type=jnp.float32)
+    y = y + p["D"][:, None] * xheads
+    y = y.reshape(B, S, nh * hd)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_w"], cfg.norm_eps)
+    return shard_tokens(jnp.einsum("bsc,cd->bsd", y.astype(x.dtype), p["out_proj"]))
+
+
+def mamba2_decode(p, x, state, cfg):
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    B = x.shape[0]
+    z, xbc, dt = _mamba2_split(p, x, cfg)
+    xc, conv_state = _conv_step(state["conv"], xbc[:, 0], p["conv_w"], p["conv_b"])
+    xbc_conv = jax.nn.silu(xc)[:, None, :]
+    a, b, Cm, xheads = _mamba2_ssm(p, xbc_conv, dt, cfg)
+    h = a[:, 0][..., None, None] * state["h"] + b[:, 0]
+    y = jnp.einsum("bhdn,bn->bhd", h, Cm[:, 0])
+    y = y + p["D"][:, None] * xheads[:, 0]
+    y = y.reshape(B, 1, nh * hd)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsc,cd->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"conv": conv_state, "h": h}
+
+
+def mamba2_state_init(batch, cfg, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Sequential-scan oracle (tests compare the chunked path against this)
+# ----------------------------------------------------------------------------
+def reference_scan(a, b, h0):
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,95 @@
+"""Falcon-mamba-style attention-free LM: a stack of Mamba1 blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.attention import AttnMode
+from repro.models.layers import (
+    cross_entropy_loss, embed_apply, embed_init, logits_apply, maybe_remat,
+    rms_norm, scan_unroll, _cache_dtype,
+)
+
+
+def init(rng, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kl = jax.random.split(rng)
+
+    def layer(r):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                **ssm.mamba1_init(r, cfg, dtype)}
+
+    layers = jax.vmap(layer)(jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype, cfg.tie_embeddings),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "layers": layers,
+    }
+
+
+def forward(params, cfg, batch, mode: AttnMode = AttnMode()):
+    x = embed_apply(params["embed"], batch["tokens"])
+
+    def body(xx, lp):
+        h = rms_norm(xx, lp["ln"], cfg.norm_eps)
+        return xx + ssm.mamba1_apply(lp, h, cfg), None
+
+    fn = maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(fn, x, params["layers"], unroll=scan_unroll(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_apply(params["embed"], x, cfg.tie_embeddings)
+
+
+def loss_fn(params, cfg, batch, mode: AttnMode = AttnMode()):
+    logits = forward(params, cfg, batch, mode)
+    return cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                              batch.get("loss_mask"))
+
+
+def cache_init(cfg, batch_size: int, smax: int, dtype=None):
+    dtype = dtype or _cache_dtype(cfg)
+    st = ssm.mamba1_state_init(batch_size, cfg, dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st)
+
+
+def prefill(params, cfg, batch, smax: int, mode: AttnMode = AttnMode()):
+    x = embed_apply(params["embed"], batch["tokens"])
+    b = x.shape[0]
+
+    def body(xx, lp):
+        h = rms_norm(xx, lp["ln"], cfg.norm_eps)
+        y = ssm.mamba1_apply(lp, h, cfg)
+        # final state (cheap second pass over SSM inputs for the carry)
+        xz = jnp.einsum("bsd,de->bse", h, lp["in_proj"])
+        x_in, _ = jnp.split(xz, 2, axis=-1)
+        x_conv = jax.nn.silu(ssm._causal_conv(x_in, lp["conv_w"], lp["conv_b"]))
+        a, bb, _ = ssm._mamba1_ssm_inputs(lp, x_conv, cfg)
+        h0 = jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        _, hfin = ssm._assoc_scan_chunked(a, bb, h0, cfg.ssm_chunk,
+                                          unroll=True if cfg.unroll_scans else 1)
+        km1 = cfg.ssm_conv - 1
+        xp = jnp.pad(x_in, ((0, 0), (max(km1 - x_in.shape[1], 0), 0), (0, 0)))
+        conv_fin = xp[:, -km1:, :]
+        return xx + y, {"conv": conv_fin, "h": hfin}
+
+    x, states = jax.lax.scan(body, x, params["layers"], unroll=scan_unroll(cfg))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return states, logits_apply(params["embed"], x, cfg.tie_embeddings)[:, 0]
+
+
+def decode_step(params, cfg, batch, cache):
+    x = embed_apply(params["embed"], batch["tokens"])
+
+    def body(xx, xs):
+        lp, st = xs
+        h = rms_norm(xx, lp["ln"], cfg.norm_eps)
+        y, nst = ssm.mamba1_decode(lp, h, st, cfg)
+        return xx + y, nst
+
+    x, nstates = jax.lax.scan(body, x, (params["layers"], cache),
+                              unroll=scan_unroll(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_apply(params["embed"], x, cfg.tie_embeddings)[:, 0]
+    return logits, nstates

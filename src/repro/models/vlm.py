@@ -1,0 +1,35 @@
+"""InternVL2-style VLM: the InternViT frontend is a STUB per the assignment —
+``batch["prefix_embeds"]`` carries post-projection patch embeddings
+(B, n_patches, d_model) which are prepended to the token stream of the
+qwen2-style LM backbone (see models/transformer.py).  Loss is masked to text
+positions.  Decode: patch embeddings live in the prefix of the KV cache.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.attention import AttnMode
+
+init = tf.init
+
+
+def forward(params, cfg, batch, mode: AttnMode = AttnMode()):
+    return tf.forward(params, cfg, batch, mode)
+
+
+def loss_fn(params, cfg, batch, mode: AttnMode = AttnMode()):
+    return tf.loss_fn(params, cfg, batch, mode)
+
+
+def cache_init(cfg, batch_size, smax, dtype=None):
+    return tf.cache_init(cfg, batch_size, smax, dtype)
+
+
+def prefill(params, cfg, batch, smax: int, mode: AttnMode = AttnMode()):
+    """Prompt = [patch embeddings; prompt tokens]."""
+    return tf.prefill(params, cfg, batch, smax, mode)
+
+
+def decode_step(params, cfg, batch, cache):
+    return tf.decode_step(params, cfg, batch, cache)

@@ -1,0 +1,89 @@
+"""Sharded checkpointing with async save and ELASTIC restore.
+
+Layout:  <dir>/step_<N>/
+           manifest.json           — tree structure, shapes, dtypes, step
+           <leaf-path>.npy         — one file per pytree leaf
+
+Saves run on a background thread (training continues).  Restore takes a
+target mesh + specs and ``jax.device_put``s each leaf with its NamedSharding —
+so a checkpoint written on one mesh restores onto ANY mesh shape (elastic
+re-shard at load), which is the recovery path after pool shrink/grow.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, jax.tree.structure(tree)
+
+
+def save(ckpt_dir, step: int, tree, *, async_: bool = True):
+    """Write the pytree; returns a join()-able handle."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _write():
+        manifest = {"step": step, "leaves": {}}
+        for k, v in host.items():
+            fname = k.replace("/", "__") + ".npy"
+            np.save(d / fname, v)
+            manifest["leaves"][k] = {"file": fname, "shape": list(v.shape),
+                                     "dtype": str(v.dtype)}
+        (d / "manifest.json").write_text(json.dumps(manifest))
+        (Path(ckpt_dir) / "LATEST").write_text(str(step))
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir) -> int | None:
+    f = Path(ckpt_dir) / "LATEST"
+    if not f.exists():
+        return None
+    return int(f.read_text().strip())
+
+
+def restore(ckpt_dir, step: int, like, *, mesh=None, specs=None):
+    """Load into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  With mesh+specs, each leaf is device_put with its
+    NamedSharding — restoring onto a different mesh re-shards transparently."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat_like, _ = _flatten(like)
+    flat_specs, _ = _flatten(specs) if specs is not None else ({}, None)
+
+    loaded = {}
+    for k, meta in manifest["leaves"].items():
+        arr = np.load(d / meta["file"])
+        want = flat_like.get(k)
+        if want is not None:
+            arr = arr.astype(want.dtype)
+        if mesh is not None and k in flat_specs:
+            arr = jax.device_put(arr, NamedSharding(mesh, flat_specs[k]))
+        loaded[k] = arr
+
+    # rebuild via the same key order as `like`
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    vals = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        vals.append(loaded[key])
+    return jax.tree_util.tree_unflatten(treedef, vals)

@@ -1,0 +1,110 @@
+"""Training loop: step bundle + data + checkpointing + fault recovery.
+
+Used at toy scale by the examples/tests on the local mesh; the SAME step
+builders lower onto the 256/512-chip production meshes in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.distributed import sharding as sh
+from repro.distributed.steps import make_train_step
+from repro.models import registry
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: object
+    opt_state: object
+    step: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh, parallel: ParallelConfig,
+                 shape: ShapeConfig, ocfg: Optional[opt_mod.OptimizerConfig] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.parallel = parallel
+        self.shape = shape
+        self.ocfg = ocfg or opt_mod.OptimizerConfig()
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.bundle = make_train_step(cfg, mesh, parallel, shape, self.ocfg)
+        self.api = registry.get_model(cfg)
+        self._seed = seed
+
+    def init_state(self) -> TrainState:
+        from jax.sharding import NamedSharding
+        pspecs = self.bundle.info["pspecs"]
+        with self.mesh:
+            init = jax.jit(
+                lambda k: self.api.init(k, self.cfg),
+                out_shardings=sh.named(self.mesh, pspecs))
+            params = init(jax.random.key(self._seed))
+            opt_state = jax.jit(
+                opt_mod.adamw_init,
+                out_shardings=sh.named(self.mesh, sh.opt_specs(None, pspecs)))(params)
+        return TrainState(params=params, opt_state=opt_state, step=0)
+
+    def maybe_restore(self) -> Optional[TrainState]:
+        if not self.ckpt_dir:
+            return None
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None:
+            return None
+        params_shape = registry.eval_params_shape(self.cfg)
+        opt_shape = jax.eval_shape(opt_mod.adamw_init, params_shape)
+        pspecs = self.bundle.info["pspecs"]
+        like = {"params": params_shape, "opt": opt_shape}
+        specs = {"params": pspecs, "opt": sh.opt_specs(None, pspecs)}
+        tree = ckpt.restore(self.ckpt_dir, step, like, mesh=self.mesh,
+                            specs=specs)
+        return TrainState(params=tree["params"], opt_state=tree["opt"],
+                          step=step)
+
+    def fit(self, batches: Iterable[dict], steps: int,
+            state: Optional[TrainState] = None,
+            log_every: int = 10,
+            on_metrics: Optional[Callable[[int, dict], None]] = None):
+        state = state or self.init_state()
+        losses = []
+        pending_save = None
+        t0 = time.time()
+        with self.mesh:
+            for i, batch in enumerate(batches):
+                if i >= steps:
+                    break
+                jb = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                state.params, state.opt_state, metrics = self.bundle.fn(
+                    state.params, state.opt_state, jb)
+                state.step += 1
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                if on_metrics:
+                    on_metrics(state.step, {k: float(v) for k, v in metrics.items()})
+                if log_every and state.step % log_every == 0:
+                    rate = state.step / max(time.time() - t0, 1e-9)
+                    print(f"step {state.step:5d}  loss {loss:.4f}  "
+                          f"lr {float(metrics['lr']):.2e}  {rate:.2f} it/s",
+                          flush=True)
+                if self.ckpt_dir and self.ckpt_every and \
+                        state.step % self.ckpt_every == 0:
+                    if pending_save is not None:
+                        pending_save.join()
+                    pending_save = ckpt.save(
+                        self.ckpt_dir, state.step,
+                        {"params": state.params, "opt": state.opt_state})
+        if pending_save is not None:
+            pending_save.join()
+        return state, losses

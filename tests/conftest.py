@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS / device-count tricks are NEVER set here
+(per spec): smoke tests and benches see 1 device; multi-device integration
+tests spawn subprocesses via tests/_subproc.py."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,79 @@
+"""Config registry: all 10 assigned archs, published param totals, shapes."""
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, reduced, supports_shape
+
+EXPECTED_PARAMS_B = {  # published totals (tolerance: these are arch-family sizes)
+    "zamba2-7b": (6.0, 8.2),
+    "falcon-mamba-7b": (6.5, 7.8),
+    "internvl2-1b": (0.3, 0.7),          # LM backbone (ViT frontend is a stub)
+    "llama4-maverick-400b-a17b": (380, 420),
+    "qwen2-moe-a2.7b": (13, 15.5),
+    "qwen3-8b": (7.5, 8.8),
+    "codeqwen1.5-7b": (7.0, 8.8),
+    "granite-3-8b": (7.5, 8.8),
+    "minitron-8b": (8.0, 10.5),
+    "whisper-medium": (0.7, 1.1),
+}
+
+
+def test_ten_archs_present():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_llama4_active_params():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    a = cfg.active_param_count() / 1e9
+    assert 15 <= a <= 19, a
+
+
+def test_qwen2_moe_active_params():
+    cfg = get_config("qwen2-moe-a2.7b")
+    a = cfg.active_param_count() / 1e9
+    assert 2.0 <= a <= 3.4, a
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_configs_small(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.param_count() < 3e6
+    assert cfg.family == get_config(arch).family
+
+
+def test_exact_assigned_dims():
+    q = get_config("qwen3-8b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab_size) == (36, 4096, 32, 8, 12288, 151936)
+    assert q.qk_norm
+    z = get_config("zamba2-7b")
+    assert (z.n_layers, z.d_model, z.ssm_state) == (81, 3584, 64)
+    f = get_config("falcon-mamba-7b")
+    assert (f.n_layers, f.d_model, f.vocab_size, f.ssm_state) == (64, 4096, 65024, 16)
+    m = get_config("llama4-maverick-400b-a17b")
+    assert (m.n_experts, m.top_k, m.vocab_size, m.d_ff) == (128, 1, 202048, 8192)
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long_context_applicability():
+    long = SHAPES["long_500k"]
+    runs = [a for a in list_archs() if supports_shape(get_config(a), long)]
+    assert sorted(runs) == ["falcon-mamba-7b", "zamba2-7b"]
+    # every arch supports everything else
+    for a in list_archs():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert supports_shape(get_config(a), SHAPES[s])

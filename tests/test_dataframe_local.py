@@ -1,0 +1,96 @@
+"""Local dataframe operators vs numpy oracles — hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.dataframe import ops_local as L
+from repro.dataframe import reference as R
+from repro.dataframe.table import Table, from_numpy
+
+ints = st.integers(min_value=0, max_value=50)
+
+
+def _table(keys, vals, capacity=None):
+    return from_numpy({"k": np.asarray(keys, np.int32),
+                       "v": np.asarray(vals, np.float32)},
+                      capacity=capacity)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(ints, min_size=1, max_size=40), st.integers(0, 20))
+def test_sort_matches_numpy(keys, extra_cap):
+    vals = np.arange(len(keys), dtype=np.float32)
+    t = _table(keys, vals, capacity=len(keys) + extra_cap)
+    out = L.sort_by(t, "k")
+    got = out.to_numpy()
+    ref = R.ref_sort({"k": np.asarray(keys, np.int32), "v": vals}, "k")
+    np.testing.assert_array_equal(got["k"], ref["k"])
+    # stable: values of equal keys keep order
+    np.testing.assert_array_equal(got["v"], ref["v"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(ints, min_size=1, max_size=30),
+       st.lists(ints, min_size=1, max_size=30))
+def test_join_matches_numpy(lk, rk):
+    left = {"k": np.asarray(lk, np.int32),
+            "v": np.arange(len(lk), dtype=np.float32)}
+    right = {"k": np.asarray(rk, np.int32),
+             "w": np.arange(len(rk), dtype=np.float32) + 100}
+    ref = R.ref_join_inner(left, right, "k")
+    lt = from_numpy(left, capacity=len(lk) + 5)
+    rt = from_numpy(right, capacity=len(rk) + 3)
+    out_cap = max(len(ref["k"]), 1) + 8
+    out, overflow = L.join_inner(lt, rt, "k", out_cap)
+    assert not bool(overflow)
+    got = out.to_numpy()
+    assert len(got["k"]) == len(ref["k"])
+    a = R.sorted_rows(got)
+    b = R.sorted_rows(ref)
+    np.testing.assert_allclose(a, b)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(ints, min_size=1, max_size=40))
+def test_groupby_sum_matches_numpy(keys):
+    vals = np.random.default_rng(0).normal(size=len(keys)).astype(np.float32)
+    data = {"k": np.asarray(keys, np.int32), "v": vals}
+    t = from_numpy(data, capacity=len(keys) + 4)
+    out = L.groupby_sum(t, "k", ["v"])
+    got = out.to_numpy()
+    ref = R.ref_groupby_sum(data, "k", ["v"])
+    assert len(got["k"]) == len(ref["k"])
+    o = np.argsort(got["k"])
+    np.testing.assert_array_equal(got["k"][o], ref["k"])
+    np.testing.assert_allclose(got["v"][o], ref["v"], atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=40))
+def test_filter_compacts_stably(keep):
+    n = len(keep)
+    data = {"k": np.arange(n, dtype=np.int32),
+            "v": np.arange(n, dtype=np.float32)}
+    t = from_numpy(data, capacity=n + 3)
+    keep_padded = np.concatenate([np.asarray(keep), np.zeros(3, bool)])
+    out = L.filter_rows(t, jnp.asarray(keep_padded))
+    got = out.to_numpy()
+    want = data["k"][np.asarray(keep)]
+    np.testing.assert_array_equal(got["k"], want)
+
+
+def test_join_overflow_flag():
+    left = {"k": np.zeros(10, np.int32), "v": np.arange(10, dtype=np.float32)}
+    right = {"k": np.zeros(10, np.int32), "w": np.arange(10, dtype=np.float32)}
+    lt = from_numpy(left)
+    rt = from_numpy(right)
+    out, overflow = L.join_inner(lt, rt, "k", out_capacity=16)  # needs 100
+    assert bool(overflow)
+
+
+def test_concat():
+    a = from_numpy({"k": np.asarray([1, 2], np.int32)}, capacity=4)
+    b = from_numpy({"k": np.asarray([3, 4, 5], np.int32)}, capacity=5)
+    out = L.concat(a, b, capacity=8)
+    np.testing.assert_array_equal(out.to_numpy()["k"], [1, 2, 3, 4, 5])

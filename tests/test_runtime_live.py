@@ -1,0 +1,88 @@
+"""LiveScheduler on real devices (subprocess, 4 host devices): private
+communicators per task, heterogeneous execution of real JAX payloads, retry."""
+import pytest
+
+from tests._subproc import run_with_devices
+
+LIVE_SNIPPET = r"""
+import numpy as np, jax, jax.numpy as jnp, time
+from repro.core import (HETEROGENEOUS, BATCH, PilotDescription, PilotManager,
+                        RaptorMaster, TaskDescription)
+
+pm = PilotManager()
+pilot = pm.submit_pilot(PilotDescription(n_devices=4))
+
+def payload(comm, scalar):
+    # a real SPMD computation on the private mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = comm.size
+    x = jax.device_put(np.full((n, 128), scalar, np.float32),
+                       NamedSharding(comm.mesh, P("df")))
+    y = jax.jit(lambda a: (a * 2).sum())(x)
+    return float(y)
+
+master = RaptorMaster(pilot, HETEROGENEOUS)
+for i, r in enumerate([2, 2, 4, 1, 1]):
+    master.submit(TaskDescription(name=f"t{i}", ranks=r, fn=payload,
+                                  args=(float(i),), tags={"pipeline": "p"}))
+rep = master.run(timeout=240)
+states = [t.state.value for t in rep.tasks]
+assert all(s == "DONE" for s in states), states
+vals = [t.result for t in rep.tasks]
+assert vals[2] == 4*128*2*2.0, vals
+assert all(t.comm_build_time >= 0 for t in rep.tasks)
+assert all(len(t.devices) == t.desc.ranks for t in rep.tasks)
+print("LIVE_OK", rep.makespan)
+
+# retry: payload fails twice then succeeds
+attempts = {"n": 0}
+def flaky(comm):
+    attempts["n"] += 1
+    if attempts["n"] < 3:
+        raise RuntimeError("boom")
+    return "ok"
+m2 = RaptorMaster(pilot, HETEROGENEOUS)
+m2.submit(TaskDescription(name="flaky", ranks=1, fn=flaky, max_retries=3,
+                          tags={"pipeline": "p"}))
+rep2 = m2.run(timeout=120)
+assert rep2.tasks[0].state.value == "DONE"
+assert rep2.tasks[0].retries == 2
+print("RETRY_OK")
+"""
+
+
+@pytest.mark.integration
+def test_live_scheduler_real_payloads():
+    out = run_with_devices(LIVE_SNIPPET, n_devices=4)
+    assert "LIVE_OK" in out and "RETRY_OK" in out
+
+
+PIPELINE_SNIPPET = r"""
+import numpy as np, jax
+from repro.core import Pipeline, run_pipelines, PilotManager, PilotDescription
+
+pm = PilotManager()
+pilot = pm.submit_pilot(PilotDescription(n_devices=4))
+
+def produce(comm):
+    return 21
+
+def double(comm, x):
+    return x * 2
+
+p1 = Pipeline("etl")
+p1.add("produce", ranks=2, fn=produce)
+p1.add("double", ranks=2, fn=double, deps=["produce"])
+p2 = Pipeline("train")
+p2.add("produce", ranks=2, fn=produce)
+results, reports = run_pipelines([p1, p2], pilot.resource_manager)
+assert results[("etl", "double")] == 42
+assert results[("train", "produce")] == 21
+print("PIPELINE_OK")
+"""
+
+
+@pytest.mark.integration
+def test_mpmd_pipeline_dag():
+    out = run_with_devices(PIPELINE_SNIPPET, n_devices=4)
+    assert "PIPELINE_OK" in out

@@ -1,0 +1,130 @@
+"""Sharding rules: every param leaf gets a valid spec; divisibility
+fallbacks; cache specs; HLO collective parser on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ParallelConfig, get_config, list_archs, reduced
+from repro.distributed import sharding as sh
+from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import make_local_mesh
+from repro.models import registry
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in (rules never touch devices)."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        import numpy as _np
+        self.devices = _np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_every_param_has_valid_spec(arch):
+    cfg = get_config(arch)
+    shapes = registry.eval_params_shape(cfg)
+    specs = sh.param_specs(shapes, MESH, ParallelConfig(), cfg)
+
+    def check(path, leaf, spec):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+        sizes = {"data": 16, "model": 16}
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            assert dim % total == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_internvl_heads_fall_back_to_replicated():
+    """14 heads % 16 != 0 -> heads axis must NOT be sharded."""
+    cfg = get_config("internvl2-1b")
+    shapes = registry.eval_params_shape(cfg)
+    specs = sh.param_specs(shapes, MESH, ParallelConfig(), cfg)
+    wq_spec = specs["blocks"]["attn"]["wq"]
+    assert "model" not in jax.tree.leaves(tuple(wq_spec) or (None,)), wq_spec
+
+
+def test_qwen3_heads_sharded():
+    cfg = get_config("qwen3-8b")
+    shapes = registry.eval_params_shape(cfg)
+    specs = sh.param_specs(shapes, MESH, ParallelConfig(), cfg)
+    assert specs["blocks"]["attn"]["wq"][-2] == "model"
+    # kv heads = 8 < 16 -> replicated
+    assert specs["blocks"]["attn"]["wk"][-2] is None
+
+
+def test_expert_weights_ep_sharded():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    shapes = registry.eval_params_shape(cfg)
+    specs = sh.param_specs(shapes, MESH, ParallelConfig(), cfg)
+    assert specs["blocks"]["moe"]["wg"][-3] == "model"
+
+
+def test_cache_specs_context_sharding():
+    """long_500k zamba2: B=1 unshardable -> seq context-sharded over data."""
+    cfg = get_config("zamba2-7b")
+    cache = registry.eval_cache_shape(cfg, 1, 524288)
+    specs = sh.cache_specs(cfg, cache, MESH, ParallelConfig())
+    kspec = specs["k"]
+    assert kspec[-3] is not None     # seq sharded
+    assert kspec[-2] == "model"      # kv heads 32 % 16 == 0
+    assert kspec[-4] is None         # batch of 1 unsharded
+
+
+def test_cache_specs_decode32k():
+    cfg = get_config("qwen3-8b")
+    cache = registry.eval_cache_shape(cfg, 128, 32768)
+    specs = sh.cache_specs(cfg, cache, MESH, ParallelConfig())
+    kspec = specs["k"]
+    assert kspec[-4] in ("data", ("data",))   # batch over dp
+    assert kspec[-3] == "model"      # kv=8 not divisible -> seq over model
+    assert kspec[-2] is None
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser (roofline input) on programs with KNOWN collectives
+# ---------------------------------------------------------------------------
+def test_parse_collectives_known_psum():
+    from tests._subproc import run_with_devices
+    out = run_with_devices(r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.dryrun import parse_collectives
+mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+def f(x):
+    return jax.lax.psum(x, "d")
+g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P()))
+xs = jax.ShapeDtypeStruct((8, 1024), jnp.float32)
+co = g.lower(xs).compile()
+colls = parse_collectives(co.as_text(), pod_size=4)
+ar = [c for c in colls if c["op"] == "all-reduce"]
+assert len(ar) >= 1, colls
+# result is (1024,) f32 per device -> 4096 bytes; ring traffic 2*(7/8)*4096
+assert any(abs(c["traffic_bytes"] - 2*(7/8)*4096) < 1 for c in ar), ar
+# group of 8 spans both "pods" of 4 under pod_size=4
+assert any(c["dcn"] for c in ar)
+print("PARSE_OK")
+""", n_devices=8)
+    assert "PARSE_OK" in out
+
+
+def test_parse_groups_iota_transpose():
+    from repro.launch.dryrun import _parse_groups
+    # [4,2]<=[2,4]T(1,0): ids arange(8).reshape(2,4).T.reshape(4,2)
+    gs, crosses = _parse_groups("[4,2]<=[2,4]T(1,0)", pod_size=4)
+    assert gs == 2
+    # groups: [0,4],[1,5],[2,6],[3,7] -> all cross pods of size 4
+    assert crosses
+    gs2, crosses2 = _parse_groups("{{0,1},{2,3}}", pod_size=4)
+    assert gs2 == 2 and not crosses2

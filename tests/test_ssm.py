@@ -1,0 +1,60 @@
+"""SSM invariants: chunked associative scan == sequential scan; mamba decode
+steps == train-path outputs token by token."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import ssm
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 8, 32])
+def test_chunked_scan_equals_sequential(chunk):
+    key = jax.random.key(0)
+    B, S, D, N = 2, 32, 6, 5
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, S, D, N)))  # stable decay
+    b = jax.random.normal(jax.random.key(1), (B, S, D, N))
+    h0 = jax.random.normal(jax.random.key(2), (B, D, N))
+    hs, hfin = ssm._assoc_scan_chunked(a, b, h0, chunk)
+    ref = ssm.reference_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hfin), np.asarray(ref[:, -1]), atol=1e-5)
+
+
+@pytest.mark.parametrize("version", [1, 2])
+def test_mamba_decode_matches_train_path(version):
+    arch = "falcon-mamba-7b" if version == 1 else "zamba2-7b"
+    cfg = reduced(get_config(arch))
+    init = ssm.mamba1_init if version == 1 else ssm.mamba2_init
+    apply_ = ssm.mamba1_apply if version == 1 else ssm.mamba2_apply
+    decode = ssm.mamba1_decode if version == 1 else ssm.mamba2_decode
+    state_init = ssm.mamba1_state_init if version == 1 else ssm.mamba2_state_init
+
+    p = init(jax.random.key(0), cfg, jnp.float32)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model)) * 0.3
+    y_train = apply_(p, x, cfg)
+    state = state_init(B, cfg, jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, state = decode(p, x[:, t:t + 1], state, cfg)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_train),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_causal_conv_matches_stepwise():
+    B, S, C, K = 2, 9, 4, 4
+    x = jax.random.normal(jax.random.key(0), (B, S, C))
+    w = jax.random.normal(jax.random.key(1), (K, C))
+    b = jax.random.normal(jax.random.key(2), (C,))
+    full = ssm._causal_conv(x, w, b)
+    state = jnp.zeros((B, K - 1, C))
+    outs = []
+    for t in range(S):
+        y, state = ssm._conv_step(state, x[:, t], w, b)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=1e-5)

@@ -1,0 +1,149 @@
+"""Optimizer, checkpoint (incl. elastic restore), compression, trainer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ParallelConfig, get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_local_mesh
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    p0 = rng.normal(size=(4, 3)).astype(np.float32)
+    g = rng.normal(size=(4, 3)).astype(np.float32)
+    cfg = opt.OptimizerConfig(peak_lr=1e-2, warmup_steps=0, total_steps=10,
+                              weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.asarray(p0)}
+    state = opt.adamw_init(params)
+    new_p, state, _ = opt.adamw_update({"w": jnp.asarray(g)}, state, params, cfg)
+    # numpy adam step 1
+    mu = 0.1 * g
+    nu = 0.05 * g * g
+    mu_hat = mu / (1 - 0.9)
+    nu_hat = nu / (1 - 0.95)
+    lr = opt.cosine_schedule(cfg, 1)
+    want = p0 - float(lr) * mu_hat / (np.sqrt(nu_hat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, atol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    cfg = opt.OptimizerConfig(peak_lr=1.0, min_lr_ratio=0.1, warmup_steps=10,
+                              total_steps=110)
+    assert float(opt.cosine_schedule(cfg, 0)) == 0.0
+    assert float(opt.cosine_schedule(cfg, 10)) == pytest.approx(1.0, abs=1e-3)
+    assert float(opt.cosine_schedule(cfg, 110)) == pytest.approx(0.1, abs=1e-3)
+    assert float(opt.cosine_schedule(cfg, 60)) == pytest.approx(0.55, abs=0.01)
+
+
+def test_grad_clipping():
+    cfg = opt.OptimizerConfig(clip_norm=1.0, warmup_steps=0, peak_lr=1.0,
+                              weight_decay=0.0)
+    params = {"w": jnp.zeros((3,))}
+    state = opt.adamw_init(params)
+    g = {"w": jnp.asarray([100.0, 0.0, 0.0])}
+    _, _, metrics = opt.adamw_update(g, state, params, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(100.0)
+
+
+def test_adamw_converges_quadratic():
+    cfg = opt.OptimizerConfig(peak_lr=0.1, warmup_steps=0, total_steps=200,
+                              weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.adamw_init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = opt.adamw_update(g, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+# --------------------------------------------------------------------------
+# checkpoint: roundtrip + elastic restore onto a different mesh
+# --------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+    h = ckpt.save(tmp_path, 7, tree, async_=True)
+    h.join()
+    assert ckpt.latest_step(tmp_path) == 7
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = ckpt.restore(tmp_path, 7, like)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_elastic_restore_different_mesh(tmp_path):
+    """Save from a (1,1) mesh, restore onto a (1,1) mesh with explicit specs —
+    the resharding path (device_put with NamedSharding) is exercised; on
+    multi-device hosts the same code reshapes across mesh sizes."""
+    from jax.sharding import PartitionSpec as P
+    mesh = make_local_mesh(1, 1)
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(tmp_path, 1, tree, async_=False)
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    back = ckpt.restore(tmp_path, 1, like, mesh=mesh, specs={"w": P(None, None)})
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+    assert back["w"].sharding.mesh.shape == mesh.shape
+
+
+# --------------------------------------------------------------------------
+# trainer end-to-end (tiny): loss decreases; checkpoint-resume continuity
+# --------------------------------------------------------------------------
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    from repro.train.data import SyntheticCorpus
+    from repro.train.trainer import Trainer
+
+    cfg = dataclasses.replace(reduced(get_config("granite-3-8b")), n_layers=2)
+    mesh = make_local_mesh(1, 1)
+    shape = ShapeConfig("t", "train", 32, 4)
+    tr = Trainer(cfg, mesh, ParallelConfig(), shape, ckpt_dir=str(tmp_path),
+                 ckpt_every=10)
+    corpus = SyntheticCorpus(cfg.vocab_size, 0)
+    state, losses = tr.fit(corpus.batches(4, 32, 20), steps=20, log_every=0)
+    assert losses[-1] < losses[0]
+    assert ckpt.latest_step(tmp_path) == 20
+
+    # resume restores step + params and continues
+    tr2 = Trainer(cfg, mesh, ParallelConfig(), shape, ckpt_dir=str(tmp_path))
+    st2 = tr2.maybe_restore()
+    assert st2 is not None and st2.step == 20
+    np.testing.assert_array_equal(np.asarray(st2.params["final_norm"]),
+                                  np.asarray(state.params["final_norm"]))
+    st3, losses3 = tr2.fit(corpus.batches(4, 32, 3), steps=3, state=st2,
+                           log_every=0)
+    assert st3.step == 23
+
+
+def test_grad_accum_equivalence():
+    """microbatches=2 must equal a single big batch step (same grads)."""
+    from repro.distributed.steps import make_train_step
+    from repro.models import get_model, make_concrete_batch, train_batch_shapes
+    from repro.train.optimizer import adamw_init
+
+    cfg = dataclasses.replace(reduced(get_config("granite-3-8b")), n_layers=2)
+    mesh = make_local_mesh(1, 1)
+    shape = ShapeConfig("t", "train", 16, 4)
+    rng = np.random.default_rng(0)
+    batch = make_concrete_batch(train_batch_shapes(cfg, 4, 16), rng,
+                                cfg.vocab_size)
+    api = get_model(cfg)
+    with mesh:
+        params = api.init(jax.random.key(0), cfg)
+        b1 = make_train_step(cfg, mesh, ParallelConfig(microbatches=1), shape)
+        b2 = make_train_step(cfg, mesh, ParallelConfig(microbatches=2), shape)
+        p1, _, m1 = b1.fn(params, adamw_init(params), dict(batch))
+        params2 = api.init(jax.random.key(0), cfg)
+        p2, _, m2 = b2.fn(params2, adamw_init(params2), dict(batch))
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=1e-4)
+    np.testing.assert_allclose(np.asarray(p1["final_norm"]),
+                               np.asarray(p2["final_norm"]), atol=1e-4)
