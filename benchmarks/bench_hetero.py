@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import json
 
-from benchmarks.common import FAST, emit, run_with_devices
+from benchmarks.common import FAST, emit, run_with_devices, trace_summary
 from repro.core import BATCH, HETEROGENEOUS, SimOptions, TaskDescription, simulate
 
 SIM_RANKS = [84, 168, 336, 672, 1344, 2688]
@@ -67,7 +67,11 @@ for policy in (HETEROGENEOUS, BATCH):
     rep = sched.run(mix(), timeout=900)
     assert all(t.state.value == "DONE" for t in rep.tasks), \
         [(t.desc.name, t.error) for t in rep.tasks]
+    # event trace: same schema as the virtual-clock sim
     res[policy] = rep.makespan
+    res[policy + "/n_dispatch"] = sum(e.kind == "dispatch" for e in rep.trace)
+    res[policy + "/comm_build_s"] = sum(
+        e.value for e in rep.trace if e.kind == "comm_build")
 print("RESULT::" + json.dumps(res))
 """
 
@@ -93,8 +97,11 @@ def run():
     real = json.loads(out.split("RESULT::")[1])
     impr = (real[BATCH] - real[HETEROGENEOUS]) / real[BATCH] * 100
     emit("hetero/real/heterogeneous", real[HETEROGENEOUS] * 1e6,
-         f"improvement_pct={impr:.1f}")
-    emit("hetero/real/batch", real[BATCH] * 1e6, "")
+         f"improvement_pct={impr:.1f};"
+         f"n_dispatch={real[HETEROGENEOUS + '/n_dispatch']};"
+         f"comm_build_s={real[HETEROGENEOUS + '/comm_build_s']:.3f}")
+    emit("hetero/real/batch", real[BATCH] * 1e6,
+         f"n_dispatch={real[BATCH + '/n_dispatch']}")
 
     results = [{"mode": "real", "ranks": 4, "het": real[HETEROGENEOUS],
                 "bat": real[BATCH], "impr_pct": impr}]
@@ -114,11 +121,13 @@ def run():
             bat = simulate(paper_mix(per_task, *margs), ranks,
                            SimOptions(policy=BATCH, noise=0.0, seed=1))
             impr = (bat.makespan - het.makespan) / bat.makespan * 100
+            ts = trace_summary(het)
             results.append({"mode": f"sim/{cname}", "ranks": ranks,
                             "het": het.makespan, "bat": bat.makespan,
-                            "impr_pct": impr})
+                            "impr_pct": impr, "trace": ts})
             emit(f"hetero/sim/{cname}/ranks={ranks}", het.makespan * 1e6,
-                 f"batch_s={bat.makespan:.1f};improvement_pct={impr:.1f}")
+                 f"batch_s={bat.makespan:.1f};improvement_pct={impr:.1f};"
+                 f"mean_wait_s={ts['mean_wait_s']:.1f}")
     return results
 
 

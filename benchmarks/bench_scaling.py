@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import json
 
-from benchmarks.common import FAST, emit, run_with_devices
+from benchmarks.common import FAST, emit, run_with_devices, trace_summary
 from repro.core import SimOptions, TaskDescription, simulate
 
 REAL_P = [1, 2, 4]
@@ -105,7 +105,8 @@ def _sim_points(op: str, scaling: str, base_time: float):
                                             duration_model=lambda r, d=dur: d,
                                             tags={"pipeline": op})], p, opts)
             res.append({"op": op, "scaling": scaling, "mode": mode,
-                        "parallelism": p, "time_s": rep.makespan})
+                        "parallelism": p, "time_s": rep.makespan,
+                        "overhead_s": trace_summary(rep)["comm_build_total_s"]})
     return res
 
 
@@ -142,7 +143,7 @@ def run():
         for s in sims:
             if s["mode"] == "rp":
                 emit(f"scaling/{op}/{s['scaling']}/P={s['parallelism']}/sim_rp",
-                     s["time_s"] * 1e6, "")
+                     s["time_s"] * 1e6, f"overhead_s={s['overhead_s']:.2f}")
     return results
 
 

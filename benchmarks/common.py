@@ -38,3 +38,26 @@ def run_with_devices(snippet: str, n_devices: int, timeout: int = 900) -> str:
     if r.returncode != 0:
         raise RuntimeError(f"bench subprocess failed:\n{r.stdout}\n{r.stderr}")
     return r.stdout
+
+
+def trace_summary(report) -> dict:
+    """Uniform consumer of the scheduler event trace (SimReport.trace) —
+    shared by bench_hetero / bench_scaling / bench_overhead so live and
+    simulated runs report identical schedule-derived metrics."""
+    from collections import Counter
+
+    kinds = Counter(e.kind for e in report.trace)
+    submits = {e.uid: e.t for e in report.trace if e.kind == "submit"}
+    waits = [e.t - submits[e.uid] for e in report.trace
+             if e.kind == "dispatch" and e.uid in submits]
+    comm = [e.value for e in report.trace if e.kind == "comm_build"]
+    return {
+        "n_submit": kinds.get("submit", 0),
+        "n_dispatch": kinds.get("dispatch", 0),
+        "n_done": kinds.get("done", 0),
+        "n_retry": kinds.get("retry", 0),
+        "n_speculate": kinds.get("speculate", 0),
+        "mean_wait_s": sum(waits) / len(waits) if waits else 0.0,
+        "comm_build_total_s": sum(comm),
+        "comm_build_mean_s": sum(comm) / len(comm) if comm else 0.0,
+    }

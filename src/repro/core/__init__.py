@@ -8,18 +8,22 @@ from repro.core.pilot import (
     InsufficientResources, Pilot, PilotDescription, PilotManager,
     ResourceManager,
 )
-from repro.core.pipeline import Pipeline, run_pipelines
+from repro.core.pipeline import Pipeline, Stage, run_pipelines
 from repro.core.raptor import RaptorMaster, session
 from repro.core.scheduler import (
-    BATCH, HETEROGENEOUS, LiveScheduler, SimOptions, SimReport,
-    default_overhead_model, simulate,
+    BATCH, HETEROGENEOUS, ExecEvent, Executor, LiveScheduler,
+    SchedulerSession, SimOptions, SimReport, StubComm, ThreadExecutor,
+    TraceEvent, VirtualClockExecutor, default_overhead_model,
+    interleave_by_pipeline, simulate,
 )
 from repro.core.task import Task, TaskDescription, TaskState
 
 __all__ = [
-    "BATCH", "HETEROGENEOUS", "Communicator", "InsufficientResources",
-    "LiveScheduler", "Pilot", "PilotDescription", "PilotManager", "Pipeline",
-    "RaptorMaster", "ResourceManager", "SimOptions", "SimReport", "Task",
-    "TaskDescription", "TaskState", "build_communicator",
-    "default_overhead_model", "run_pipelines", "session", "simulate",
+    "BATCH", "HETEROGENEOUS", "Communicator", "ExecEvent", "Executor",
+    "InsufficientResources", "LiveScheduler", "Pilot", "PilotDescription",
+    "PilotManager", "Pipeline", "RaptorMaster", "ResourceManager",
+    "SchedulerSession", "SimOptions", "SimReport", "Stage", "StubComm",
+    "Task", "TaskDescription", "TaskState", "ThreadExecutor", "TraceEvent",
+    "VirtualClockExecutor", "build_communicator", "default_overhead_model",
+    "interleave_by_pipeline", "run_pipelines", "session", "simulate",
 ]

@@ -45,11 +45,26 @@ class ResourceManager:
         with self._lock:
             return len(self._free)
 
-    def allocate(self, n: int) -> tuple:
+    @property
+    def failed_devices(self) -> set:
+        with self._lock:
+            return set(self._failed)
+
+    def allocate(self, n: int, exclude: Sequence = ()) -> tuple:
+        """Allocate ``n`` devices, preferring ones not in ``exclude`` (used
+        by retry-with-device-exclusion: a task avoids devices its previous
+        attempts failed on, falling back to them only when nothing else is
+        free)."""
         with self._lock:
             if len(self._free) < n:
                 raise InsufficientResources(f"want {n}, free {len(self._free)}")
-            got, self._free = self._free[:n], self._free[n:]
+            if exclude:
+                exclude = set(exclude)
+                ordered = [d for d in self._free if d not in exclude] + \
+                          [d for d in self._free if d in exclude]
+            else:
+                ordered = self._free
+            got, self._free = ordered[:n], ordered[n:]
             return tuple(got)
 
     def release(self, devices: Sequence):

@@ -1,10 +1,15 @@
-"""RAPTOR-style master/worker facade over the schedulers (paper Fig. 3/4).
+"""RAPTOR-style master/worker facade over the unified scheduler core (paper
+Fig. 3/4).
 
-The master receives TaskDescriptions, asks the scheduler to place them on the
-pilot's devices, builds the private communicator per task, and collects
-results — i.e. the orchestration flow of the paper in JAX terms:
+The master receives TaskDescriptions, asks the scheduler core to place them
+on the pilot's devices, builds the private communicator per task, and
+collects results — i.e. the orchestration flow of the paper in JAX terms:
 
     client -> PilotManager -> Pilot -> RaptorMaster -> (comm, task) -> result
+
+Live and simulated execution are the SAME ``SchedulerSession`` dispatch/
+retry/spec-exec code path; only the executor differs (threads on real JAX
+devices vs the deterministic virtual clock).
 """
 from __future__ import annotations
 
@@ -12,7 +17,8 @@ from typing import Optional, Sequence
 
 from repro.core.pilot import Pilot, PilotDescription, PilotManager
 from repro.core.scheduler import (
-    BATCH, HETEROGENEOUS, LiveScheduler, SimOptions, SimReport, simulate,
+    BATCH, HETEROGENEOUS, SchedulerSession, SimOptions, SimReport,
+    ThreadExecutor, VirtualClockExecutor, simulate,
 )
 from repro.core.task import TaskDescription
 
@@ -20,9 +26,11 @@ from repro.core.task import TaskDescription
 class RaptorMaster:
     """Execution master bound to one pilot."""
 
-    def __init__(self, pilot: Pilot, policy: str = HETEROGENEOUS):
+    def __init__(self, pilot: Pilot, policy: str = HETEROGENEOUS,
+                 speculative_factor: Optional[float] = None):
         self.pilot = pilot
         self.policy = policy
+        self.speculative_factor = speculative_factor
         self._queue: list[TaskDescription] = []
 
     def submit(self, desc: TaskDescription):
@@ -34,13 +42,18 @@ class RaptorMaster:
 
     def run(self, timeout: float = 600.0) -> SimReport:
         """Execute all queued tasks on real devices; returns the report."""
-        sched = LiveScheduler(self.pilot.resource_manager, self.policy)
+        sess = SchedulerSession(ThreadExecutor(),
+                                self.pilot.resource_manager,
+                                policy=self.policy,
+                                speculative_factor=self.speculative_factor)
         descs, self._queue = self._queue, []
-        return sched.run(descs, timeout=timeout)
+        return sess.run(descs, timeout=timeout)
 
     def run_simulated(self, opts: Optional[SimOptions] = None) -> SimReport:
-        """Execute on the virtual clock (large-scale experiments)."""
-        opts = opts or SimOptions(policy=self.policy)
+        """Execute on the virtual clock (large-scale experiments) — the same
+        scheduler core over a VirtualClockExecutor."""
+        opts = opts or SimOptions(policy=self.policy,
+                                  speculative_factor=self.speculative_factor)
         descs, self._queue = self._queue, []
         return simulate(descs, self.pilot.desc.n_devices, opts)
 

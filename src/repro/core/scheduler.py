@@ -1,6 +1,7 @@
-"""Schedulers — the paper's contribution, isolated from the executor so the
-SAME scheduling logic runs (a) live on real JAX devices (threads) and (b) on a
-virtual clock at 84–2688 ranks (the paper's ORNL-Summit scales).
+"""Unified event-driven scheduler core — the paper's contribution, written
+ONCE against an abstract ``Executor`` so the *identical* scheduling code runs
+(a) live on real JAX devices (``ThreadExecutor``) and (b) on a virtual clock
+at 84–2688 ranks (``VirtualClockExecutor``, the paper's ORNL-Summit scales).
 
 Two policies, mirroring the paper's §4.3 comparison:
 
@@ -10,23 +11,39 @@ Two policies, mirroring the paper's §4.3 comparison:
   pipeline; resources released by one pipeline are NOT available to others.
   Paper result: heterogeneous is 4–15 % faster at equal resources.
 
-Also implements, for scale-out readiness: retry-on-failure, device-failure
-(pool shrink) handling, straggler detection with speculative re-execution,
-and priority+FIFO dispatch with backfill.
+The core (``SchedulerSession``) owns policy, dispatch, retry with
+device-exclusion, straggler detection with speculative re-execution, and
+device-failure / elastic pool handling; the executor owns only the clock and
+the mechanics of running one task.  Because the live executor is just another
+backend, live mode gets retry-with-exclusion, spec-exec, stragglers, and
+elastic shrink/grow for free — previously these existed only in the sim.
+
+The session is persistent: tasks may be submitted while others run
+(continuous DAG release, see ``core/pipeline.py``), and every lifecycle step
+is appended to a per-task event trace (``TraceEvent``: submit / dispatch /
+comm_build / done / fail / retry / speculate / cancel / device_failure)
+consumed uniformly by the benchmarks and ``SimReport``.
 """
 from __future__ import annotations
 
+import abc
 import dataclasses
 import heapq
 import itertools
 import math
+import queue as _queue
 import statistics
-from typing import Callable, Optional, Sequence
+import threading
+import time as _time
+from typing import Any, Callable, Optional, Sequence
 
+from repro.core.pilot import InsufficientResources, ResourceManager
 from repro.core.task import Task, TaskDescription, TaskState
 
 HETEROGENEOUS = "heterogeneous"
 BATCH = "batch"
+
+_SHARED = "_shared"
 
 
 def interleave_by_pipeline(tasks):
@@ -60,6 +77,26 @@ def default_overhead_model(ranks: int) -> float:
     return 2.8 + 0.0012 * ranks
 
 
+# ---------------------------------------------------------------------------
+# event trace — one schema for sim and live, consumed by benchmarks/ and
+# SimReport (schema documented in ROADMAP.md §Runtime architecture)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TraceEvent:
+    t: float          # executor clock (virtual seconds or perf_counter)
+    kind: str         # submit|dispatch|comm_build|done|fail|retry|speculate|
+                      # cancel|device_failure
+    task: str = ""    # task name ("" for pool-level events)
+    uid: int = -1
+    pipeline: str = ""
+    ranks: int = 0
+    value: float = 0.0   # kind-specific payload (comm_build: seconds;
+                         # device_failure: #devices lost)
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 @dataclasses.dataclass
 class SimReport:
     makespan: float
@@ -68,9 +105,16 @@ class SimReport:
     per_pipeline: dict
     n_speculative: int = 0
     n_retries: int = 0
+    trace: list = dataclasses.field(default_factory=list)
 
     def pipeline_makespan(self, key: str) -> float:
         return self.per_pipeline.get(key, 0.0)
+
+    def events(self, kind: Optional[str] = None) -> list:
+        """Filter the event trace by kind (None -> whole trace)."""
+        if kind is None:
+            return list(self.trace)
+        return [e for e in self.trace if e.kind == kind]
 
 
 @dataclasses.dataclass
@@ -86,260 +130,620 @@ class SimOptions:
     device_failures: Sequence[tuple] = ()  # [(time_s, n_devices), ...]
 
 
+# ---------------------------------------------------------------------------
+# executor interface
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ExecEvent:
+    """What an executor delivers back to the scheduler core."""
+    kind: str                      # done|fail|tick|device_failure
+    task: Optional[Task] = None
+    result: Any = None
+    error: Optional[str] = None
+    comm_build_s: float = 0.0
+    n_devices: int = 0             # device_failure payload
+
+
+class Executor(abc.ABC):
+    """Runs one task at a time on behalf of the scheduler core.
+
+    The core allocates ``task.devices`` from the policy pools, then calls
+    ``launch``; the executor later delivers exactly one ``done``/``fail``
+    ExecEvent per launch via ``poll`` (unless ``cancel`` returned True).
+    The executor also owns the clock: virtual seconds or wall time.
+    """
+
+    #: True when ``now()`` is wall time.  Scheduler timeouts are liveness
+    #: guards against hangs, so they are enforced only on wall-clock
+    #: executors — a virtual clock drains its event heap deterministically
+    #: and healthy simulations routinely span thousands of virtual seconds.
+    wall_clock: bool = True
+
+    @abc.abstractmethod
+    def now(self) -> float:
+        ...
+
+    @abc.abstractmethod
+    def launch(self, task: Task, duration_hint: Optional[float] = None):
+        """Begin executing ``task`` on ``task.devices``.  ``duration_hint``
+        is set for speculative duplicates (expected runtime on a healthy
+        device); the virtual clock honours it, live executors ignore it."""
+
+    @abc.abstractmethod
+    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
+        """Next event.  ``timeout == 0`` -> non-blocking (None if nothing is
+        ready *right now*; must not advance a virtual clock).  Otherwise a
+        live executor blocks up to ``timeout`` and returns a ``tick`` event
+        on expiry; a virtual executor returns the next event (advancing its
+        clock) or None when no event can ever arrive again."""
+
+    def cancel(self, task: Task) -> bool:
+        """Best-effort abort.  True -> the task is dead *now* and no event
+        will be delivered for it (core reclaims devices immediately).
+        False -> a completion event will still arrive later (live threads
+        cannot be killed; the core ignores the event and reclaims then)."""
+        return False
+
+
+class VirtualClockExecutor(Executor):
+    """Deterministic event-heap executor — the paper's large-scale mode.
+
+    Durations come from ``desc.duration_model(ranks)`` with lognormal noise,
+    straggler and failure injection per ``SimOptions``; communicator-build
+    overhead from ``opts.overhead_model``.  Device failures are injected as
+    timed events the core turns into pool shrinks."""
+
+    wall_clock = False
+
+    def __init__(self, opts: Optional[SimOptions] = None):
+        import random
+        self.opts = opts or SimOptions()
+        self.rng = random.Random(self.opts.seed)
+        self._now = 0.0
+        self._seq = itertools.count()
+        self._heap: list = []
+        self._canceled: set = set()
+        for ft, nf in self.opts.device_failures:
+            heapq.heappush(self._heap,
+                           (ft, next(self._seq),
+                            ExecEvent("device_failure", n_devices=nf)))
+
+    def now(self) -> float:
+        return self._now
+
+    def launch(self, task: Task, duration_hint: Optional[float] = None):
+        opts = self.opts
+        if duration_hint is not None:
+            # speculative duplicate: runs at the hinted (median) rate on a
+            # fresh device — no overhead, no straggler/failure injection
+            oh, dur, fails = 0.0, duration_hint, False
+        else:
+            oh = opts.overhead_model(task.desc.ranks)
+            dur = task.desc.duration_model(task.desc.ranks)
+            dur *= math.exp(self.rng.gauss(0.0, opts.noise))
+            if opts.straggler_prob and self.rng.random() < opts.straggler_prob:
+                dur *= opts.straggler_slowdown
+            fails = bool(opts.failure_prob
+                         and self.rng.random() < opts.failure_prob)
+        ev = ExecEvent("fail" if fails else "done", task=task,
+                       error="injected failure" if fails else None,
+                       comm_build_s=oh)
+        heapq.heappush(self._heap,
+                       (self._now + oh + dur, next(self._seq), ev))
+
+    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
+        if timeout == 0:
+            return None   # never advance the clock on an opportunistic poll
+        while self._heap:
+            t, _, ev = heapq.heappop(self._heap)
+            if ev.task is not None and ev.task.uid in self._canceled:
+                continue
+            self._now = t
+            return ev
+        return None
+
+    def cancel(self, task: Task) -> bool:
+        self._canceled.add(task.uid)
+        return True
+
+
+@dataclasses.dataclass
+class StubComm:
+    """Communicator stand-in when ``ThreadExecutor(build_comm=False)`` — used
+    by tests that exercise scheduling on fake devices without JAX meshes."""
+    devices: tuple
+    mesh: Any = None
+    build_seconds: float = 0.0
+
+    @property
+    def size(self) -> int:
+        return len(self.devices)
+
+
+class ThreadExecutor(Executor):
+    """Live executor: each task runs ``fn(comm, *args, **kwargs)`` in a
+    worker thread on its allocated devices, with a freshly built private
+    Communicator (the paper's per-task MPI_Comm analogue)."""
+
+    def __init__(self, build_comm: bool = True, tick: float = 0.05):
+        self.build_comm = build_comm
+        self.tick = tick
+        self._q: "_queue.Queue[ExecEvent]" = _queue.Queue()
+
+    def now(self) -> float:
+        return _time.perf_counter()
+
+    def launch(self, task: Task, duration_hint: Optional[float] = None):
+        def worker():
+            comm_s = 0.0
+            try:
+                if self.build_comm:
+                    from repro.core.communicator import build_communicator
+                    comm = build_communicator(task.devices,
+                                              task.desc.mesh_axes,
+                                              task.desc.mesh_shape,
+                                              uid=f"task{task.uid}")
+                    comm_s = comm.build_seconds
+                else:
+                    comm = StubComm(devices=tuple(task.devices))
+                res = task.desc.fn(comm, *task.desc.args, **task.desc.kwargs)
+                self._q.put(ExecEvent("done", task=task, result=res,
+                                      comm_build_s=comm_s))
+            except Exception as e:  # noqa: BLE001 — report any payload error
+                self._q.put(ExecEvent("fail", task=task,
+                                      error=f"{type(e).__name__}: {e}",
+                                      comm_build_s=comm_s))
+
+        threading.Thread(target=worker, daemon=True).start()
+
+    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
+        if timeout == 0:
+            try:
+                return self._q.get_nowait()
+            except _queue.Empty:
+                return None
+        try:
+            return self._q.get(timeout=self.tick if timeout is None
+                               else min(timeout, self.tick))
+        except _queue.Empty:
+            return ExecEvent("tick")
+
+
+# ---------------------------------------------------------------------------
+# the scheduler core
+# ---------------------------------------------------------------------------
+class SchedulerSession:
+    """Persistent scheduling session over one executor + one device pool.
+
+    Supports continuous task release: ``submit`` may be called at any time
+    (e.g. the moment a DAG stage's deps complete) and freed devices backfill
+    pending work immediately — no wave barrier.  ``wait_any`` blocks until at
+    least one task reaches DONE/FAILED; ``drain`` runs everything to
+    completion; ``close`` returns the ``SimReport`` with the event trace.
+    """
+
+    def __init__(self, executor: Executor, resource_manager: ResourceManager,
+                 policy: str = HETEROGENEOUS,
+                 pipelines: Optional[Sequence[str]] = None,
+                 speculative_factor: Optional[float] = None,
+                 tick: float = 0.05):
+        self.executor = executor
+        self.rm = resource_manager
+        self.policy = policy
+        self.speculative_factor = speculative_factor
+        self.tick = tick
+        self.t0 = executor.now()
+        self.tasks: list[Task] = []
+        self.pending: list[Task] = []
+        self.running: dict[int, Task] = {}
+        self.trace: list[TraceEvent] = []
+        self.overhead_total = 0.0
+        self.n_speculative = 0
+        self.n_retries = 0
+        self._done_durations: dict[str, list] = {}
+        self._finished_uids: set = set()
+        self._ignored: set = set()   # live attempts whose outcome no longer
+        # matters (spec-exec losers): their event only releases devices
+        self._declared = list(pipelines) if pipelines else []
+        self._pools: Optional[dict[str, ResourceManager]] = None
+        self._batch_devs: tuple = ()
+        self._max_timeout = 0.0   # largest wait budget seen; sizes the reaper
+
+    # -- trace ------------------------------------------------------------
+    def _tr(self, kind: str, task: Optional[Task] = None, t: Optional[float] = None,
+            value: float = 0.0):
+        self.trace.append(TraceEvent(
+            t=self.executor.now() if t is None else t, kind=kind,
+            task=task.desc.name if task else "",
+            uid=task.uid if task else -1,
+            pipeline=task.desc.tags.get("pipeline", "default") if task else "",
+            ranks=task.desc.ranks if task else 0, value=value))
+
+    # -- pools ------------------------------------------------------------
+    def _ensure_pools(self, descs: Sequence[TaskDescription]):
+        if self._pools is not None:
+            if self.policy == BATCH:
+                unknown = {d.tags.get("pipeline", "default") for d in descs} \
+                    - set(self._pools)
+                if unknown:
+                    raise InsufficientResources(
+                        f"batch policy: pipelines {sorted(unknown)} were not "
+                        f"declared when the pool was partitioned; pass "
+                        f"pipelines=[...] at session start")
+            return
+        if self.policy == BATCH:
+            pipes = sorted(set(self._declared)
+                           | {d.tags.get("pipeline", "default") for d in descs})
+            share = self.rm.total // len(pipes)
+            if share == 0:
+                raise InsufficientResources(
+                    f"batch policy: {len(pipes)} pipelines over "
+                    f"{self.rm.total} devices leaves 0 devices per partition")
+            devs = self.rm.allocate(share * len(pipes))
+            self._batch_devs = devs
+            self._pools = {p: ResourceManager(devs[i * share:(i + 1) * share])
+                           for i, p in enumerate(pipes)}
+        else:
+            self._pools = {_SHARED: self.rm}
+
+    def _pool_of(self, task: Task) -> ResourceManager:
+        if self.policy == BATCH:
+            return self._pools[task.desc.tags.get("pipeline", "default")]
+        return self._pools[_SHARED]
+
+    # -- public API -------------------------------------------------------
+    def submit(self, descs: Sequence[TaskDescription]) -> list[Task]:
+        """Enqueue tasks; dispatches immediately onto any free devices."""
+        descs = list(descs)
+        for d in descs:
+            if self.executor.wall_clock and d.fn is None:
+                raise ValueError(
+                    f"task {d.name!r}: fn is required for live execution "
+                    f"(duration_model alone only drives the virtual clock)")
+            if not self.executor.wall_clock and d.duration_model is None:
+                raise ValueError(
+                    f"task {d.name!r}: duration_model is required on the "
+                    f"virtual clock")
+        self._ensure_pools(descs)
+        now = self.executor.now()
+        tasks = [Task(desc=d) for d in descs]
+        for t in tasks:
+            t.state = TaskState.PENDING
+            t.submit_time = now
+            self._tr("submit", t, t=now)
+        self.tasks.extend(tasks)
+        self.pending.extend(tasks)
+        self._dispatch()
+        return tasks
+
+    @property
+    def outstanding(self) -> int:
+        """Tasks still owed a terminal state.  Spec-exec losers do not
+        count: their live threads may linger, but the workload result no
+        longer depends on them."""
+        return len(self.pending) + sum(
+            1 for uid in self.running if uid not in self._ignored)
+
+    def wait_any(self, timeout: Optional[float] = None) -> list[Task]:
+        """Block until >=1 task finishes (DONE or FAILED); returns them.
+        An empty list means stuck (nothing running and pending tasks cannot
+        dispatch) or timeout."""
+        finished: list[Task] = []
+        enforce = timeout is not None and self.executor.wall_clock
+        if enforce:
+            self._max_timeout = max(self._max_timeout, timeout)
+        start = self.executor.now()
+        while not finished:
+            if enforce and self.executor.now() - start > timeout:
+                break
+            active = any(uid not in self._ignored for uid in self.running)
+            if not active and not self.pending:
+                break                          # fully drained (canceled
+                                               # threads may still linger)
+            if not self.running:
+                self._dispatch()               # elastic grow may unblock us
+                if self.running:
+                    continue
+                ev = self.executor.poll(self.tick)
+                if ev is None:
+                    break                      # virtual clock: truly stuck
+                if ev.kind == "tick":
+                    if enforce:
+                        continue   # live + deadline: keep waiting — an
+                                   # elastic grow may make pending feasible
+                    break          # no deadline to bound the wait: stuck
+                finished.extend(self._handle(ev))
+                continue
+            ev = self.executor.poll(self.tick)
+            if ev is None:
+                break   # virtual clock exhausted with tasks in flight: bug
+            if ev.kind == "tick":
+                self._maybe_speculate()
+                self._dispatch()
+                continue
+            finished.extend(self._handle(ev))
+        # opportunistically absorb events that are already ready
+        while True:
+            ev = self.executor.poll(0)
+            if ev is None:
+                break
+            if ev.kind != "tick":
+                finished.extend(self._handle(ev))
+        return finished
+
+    def drain(self, timeout: Optional[float] = None) -> "SchedulerSession":
+        """Run until every submitted task reached a terminal state, the
+        queue is stuck, or — on a wall-clock executor — ``timeout`` expires.
+        Timeouts are a hang guard and are NOT applied to virtual clocks,
+        whose runs always terminate on their own."""
+        if not self.executor.wall_clock:
+            timeout = None
+        t_end = None if timeout is None else self.executor.now() + timeout
+        while self.outstanding:
+            remaining = None if t_end is None else t_end - self.executor.now()
+            if remaining is not None and remaining <= 0:
+                break
+            got = self.wait_any(timeout=remaining)
+            if not got and not self.running:
+                break   # stuck: pending tasks can never dispatch
+        return self
+
+    def close(self) -> SimReport:
+        """Return the report; batch partitions are handed back to the pool."""
+        # spec-exec losers and (on a failure teardown) still-running sibling
+        # tasks hold devices their live threads are still using; they are
+        # reclaimed by the background reaper below as each thread actually
+        # finishes — never eagerly, which would double-issue a busy device.
+        if self._batch_devs:
+            # hand partitions back to the parent pool, but (a) never a device
+            # a still-running worker thread holds — it stays allocated rather
+            # than being double-issued — and (b) never a device that failed
+            # during the session: propagate the failure to the parent so dead
+            # devices stay dead.
+            busy = {d for t in self.running.values() for d in t.devices}
+            dead = set()
+            for pool in self._pools.values():
+                dead |= pool.failed_devices
+            self.rm.fail_devices([d for d in self._batch_devs if d in dead])
+            self.rm.release([d for d in self._batch_devs
+                             if d not in busy and d not in dead])
+            self._batch_devs = ()
+        if self.running:
+            # live worker threads may outlive the session (e.g. a sibling
+            # task mid-run when a stage failure tears the DAG down).  Their
+            # devices cannot be released while busy, so reap in the
+            # background: as each thread delivers its event, hand the
+            # devices back to the caller's ResourceManager.
+            leftovers = {uid: t for uid, t in self.running.items()}
+            executor, rm = self.executor, self.rm
+            # outlive any wait budget the session was driven with, so a
+            # legitimately long sibling task finishing inside its timeout
+            # always gets its devices returned
+            deadline = _time.monotonic() + max(600.0, 2 * self._max_timeout)
+
+            def _reap():
+                remaining = set(leftovers)
+                while remaining and _time.monotonic() < deadline:
+                    ev = executor.poll(1.0)
+                    if ev is None:
+                        return
+                    t = ev.task
+                    if t is not None and t.uid in remaining:
+                        remaining.discard(t.uid)
+                        rm.release(t.devices)
+
+            threading.Thread(target=_reap, daemon=True).start()
+            self.running = {}
+        t0 = self.t0
+        done = [t for t in self.tasks if t.state == TaskState.DONE]
+        makespan = max((t.end_time for t in done),
+                       default=self.executor.now()) - t0
+        per_pipeline: dict[str, float] = {}
+        for t in done:
+            key = t.desc.tags.get("pipeline", "default")
+            per_pipeline[key] = max(per_pipeline.get(key, 0.0),
+                                    t.end_time - t0)
+        return SimReport(makespan=makespan, tasks=list(self.tasks),
+                         overhead_total=self.overhead_total,
+                         per_pipeline=per_pipeline,
+                         n_speculative=self.n_speculative,
+                         n_retries=self.n_retries, trace=list(self.trace))
+
+    def run(self, descs: Sequence[TaskDescription],
+            timeout: Optional[float] = None) -> SimReport:
+        """Convenience: submit everything, drain, close."""
+        self.submit(descs)
+        self.drain(timeout=timeout)
+        return self.close()
+
+    # -- internals --------------------------------------------------------
+    def _dispatch(self):
+        progressed = True
+        while progressed:
+            progressed = False
+            for task in interleave_by_pipeline(list(self.pending)):
+                pool = self._pool_of(task)
+                if pool.n_free >= task.desc.ranks:
+                    task.devices = pool.allocate(task.desc.ranks,
+                                                 exclude=task.excluded_devices)
+                    self.pending.remove(task)
+                    task.state = TaskState.RUNNING
+                    task.start_time = self.executor.now()
+                    self.running[task.uid] = task
+                    self._tr("dispatch", task)
+                    self.executor.launch(task)
+                    progressed = True
+
+    def _maybe_speculate(self):
+        """Spec-exec: if a running task exceeds factor x median of completed
+        same-name tasks, launch a duplicate on free resources."""
+        if not self.speculative_factor:
+            return
+        now = self.executor.now()
+        for task in list(self.running.values()):
+            if task.speculative_of is not None or \
+                    task.uid in self._ignored or \
+                    task.uid in self._finished_uids:
+                # never duplicate a duplicate, a canceled loser whose live
+                # thread lingers, or a task already decided
+                continue
+            hist = self._done_durations.get(task.desc.name)
+            if not hist or len(hist) < 3:
+                continue
+            med = statistics.median(hist)
+            if now - task.start_time > self.speculative_factor * med:
+                pool = self._pool_of(task)
+                if pool.n_free >= task.desc.ranks and \
+                        not any(r.speculative_of == task.uid
+                                for r in self.running.values()):
+                    dup = Task(desc=task.desc)
+                    dup.speculative_of = task.uid
+                    dup.state = TaskState.RUNNING
+                    dup.submit_time = now
+                    dup.start_time = now
+                    dup.devices = pool.allocate(task.desc.ranks,
+                                                exclude=set(task.devices))
+                    self.running[dup.uid] = dup
+                    self._tr("speculate", dup)
+                    self.executor.launch(dup, duration_hint=med)
+                    self.n_speculative += 1
+
+    def _cancel_twin(self, primary_uid: int):
+        # a retry-pending primary whose duplicate already finished must be
+        # purged from the queue, or it would be dispatched (and executed)
+        # a second time after being marked DONE
+        for p in list(self.pending):
+            if p.uid == primary_uid or p.speculative_of == primary_uid:
+                self.pending.remove(p)
+        for r in list(self.running.values()):
+            if r.uid == primary_uid or r.speculative_of == primary_uid:
+                r.state = TaskState.CANCELED
+                self._tr("cancel", r)
+                if self.executor.cancel(r):
+                    del self.running[r.uid]
+                    self._pool_of(r).release(r.devices)
+                else:
+                    # the live thread finishes on its own; its event only
+                    # releases the devices in _handle
+                    self._ignored.add(r.uid)
+
+    def _handle(self, ev: ExecEvent) -> list[Task]:
+        now = self.executor.now()
+        if ev.kind == "device_failure":
+            pool = max(self._pools.values(), key=lambda p: p.n_free)
+            n = min(ev.n_devices, pool.n_free)
+            if n:
+                pool.fail_devices(pool.allocate(n))
+            self._tr("device_failure", value=float(n))   # devices LOST, which
+            # may be fewer than requested when the pool is busy
+            self._dispatch()
+            return []
+
+        task = ev.task
+        if task.uid not in self.running:
+            return []    # event for a task already aborted by the executor
+        del self.running[task.uid]
+        self._pool_of(task).release(task.devices)
+        if task.uid in self._ignored:
+            self._ignored.discard(task.uid)
+            self._dispatch()   # live twin finished after cancel: reclaim only
+            return []
+        if ev.comm_build_s:
+            task.comm_build_time = ev.comm_build_s
+            self.overhead_total += ev.comm_build_s
+            self._tr("comm_build", task, t=task.start_time + ev.comm_build_s,
+                     value=ev.comm_build_s)
+
+        primary_uid = task.speculative_of if task.speculative_of is not None \
+            else task.uid
+
+        if ev.kind == "fail" and task.speculative_of is not None:
+            # a speculative duplicate died: the primary is still running and
+            # must not be cancelled or credited — just reclaim the devices
+            task.state = TaskState.FAILED
+            task.error = ev.error
+            self._tr("fail", task)
+            self._dispatch()
+            return []
+
+        if ev.kind == "fail" and task.speculative_of is None:
+            task.retries += 1
+            self.n_retries += 1
+            task.excluded_devices |= set(task.devices)
+            if task.retries <= task.desc.max_retries:
+                task.state = TaskState.PENDING
+                self._tr("retry", task)
+                self.pending.append(task)
+                self._dispatch()
+                return []
+            task.state = TaskState.FAILED
+            task.error = ev.error
+            task.end_time = now
+            self._tr("fail", task)
+            # terminal: a still-running speculative duplicate must not flip
+            # this task back to DONE later
+            self._finished_uids.add(task.uid)
+            self._cancel_twin(task.uid)
+            self._dispatch()
+            return [task]
+
+        if primary_uid in self._finished_uids:
+            self._dispatch()
+            return []
+        self._finished_uids.add(primary_uid)
+        self._cancel_twin(primary_uid)
+        target = task if task.speculative_of is None else \
+            next(t for t in self.tasks if t.uid == primary_uid)
+        target.state = TaskState.DONE
+        target.end_time = now
+        target.result = ev.result
+        self._done_durations.setdefault(target.desc.name, []).append(
+            now - target.start_time)
+        self._tr("done", target)
+        self._maybe_speculate()
+        self._dispatch()
+        return [target]
+
+
+# ---------------------------------------------------------------------------
+# the two historical entry points, now thin shims over the unified core
+# ---------------------------------------------------------------------------
 def simulate(descs: Sequence[TaskDescription], n_devices: int,
-             opts: SimOptions = SimOptions()) -> SimReport:
+             opts: Optional[SimOptions] = None) -> SimReport:
     """Event-driven virtual-clock execution of ``descs`` on ``n_devices``.
 
     Deterministic for a given seed.  Each TaskDescription must provide
     ``duration_model(ranks) -> seconds`` and ``tags['pipeline']``.
     """
-    import random
-    rng = random.Random(opts.seed)
-    tasks = [Task(desc=d) for d in descs]
-    for t in tasks:
-        t.state = TaskState.PENDING
-
-    # --- resource pools -----------------------------------------------------
-    if opts.policy == BATCH:
-        pipelines = sorted({t.desc.tags.get("pipeline", "default") for t in tasks})
-        share = n_devices // len(pipelines)
-        free = {p: share for p in pipelines}
-    else:
-        free = {"_shared": n_devices}
-
-    def pool_of(task: Task) -> str:
-        if opts.policy == BATCH:
-            return task.desc.tags.get("pipeline", "default")
-        return "_shared"
-
-    # --- event loop ---------------------------------------------------------
-    seq = itertools.count()
-    events: list = []   # (time, seq, kind, payload)
-    now = 0.0
-    pending: list[Task] = sorted(tasks, key=lambda t: -t.desc.priority)
-    running: dict[int, Task] = {}
-    done_durations: dict[str, list] = {}
-    overhead_total = 0.0
-    n_spec = 0
-    n_retries = 0
-    finished_uids: set = set()
-
-    for ft, nf in opts.device_failures:
-        heapq.heappush(events, (ft, next(seq), "device_failure", nf))
-
-    def duration_of(task: Task) -> float:
-        base = task.desc.duration_model(task.desc.ranks)
-        base *= math.exp(rng.gauss(0.0, opts.noise))
-        if opts.straggler_prob and rng.random() < opts.straggler_prob:
-            base *= opts.straggler_slowdown
-        return base
-
-    def try_dispatch():
-        nonlocal overhead_total, now
-        progressed = True
-        while progressed:
-            progressed = False
-            for task in interleave_by_pipeline(list(pending)):
-                pool = pool_of(task)
-                if free.get(pool, 0) >= task.desc.ranks:
-                    free[pool] -= task.desc.ranks
-                    pending.remove(task)
-                    oh = opts.overhead_model(task.desc.ranks)
-                    overhead_total += oh
-                    task.comm_build_time = oh
-                    task.start_time = now
-                    task.state = TaskState.RUNNING
-                    running[task.uid] = task
-                    dur = duration_of(task)
-                    fails = opts.failure_prob and rng.random() < opts.failure_prob
-                    kind = "task_fail" if fails else "task_done"
-                    heapq.heappush(events, (now + oh + dur, next(seq), kind, task))
-                    progressed = True
-
-    def maybe_speculate():
-        """Spec-exec: if a running task exceeds factor x median of completed
-        same-name tasks, launch a duplicate on free resources."""
-        nonlocal n_spec
-        if not opts.speculative_factor:
-            return
-        for task in list(running.values()):
-            if task.speculative_of is not None:
-                continue
-            hist = done_durations.get(task.desc.name)
-            if not hist or len(hist) < 3:
-                continue
-            med = statistics.median(hist)
-            if now - task.start_time > opts.speculative_factor * med:
-                pool = pool_of(task)
-                if free.get(pool, 0) >= task.desc.ranks and \
-                        not any(r.speculative_of == task.uid for r in running.values()):
-                    dup = Task(desc=task.desc)
-                    dup.speculative_of = task.uid
-                    dup.state = TaskState.RUNNING
-                    dup.start_time = now
-                    free[pool] -= dup.desc.ranks
-                    running[dup.uid] = dup
-                    # duplicate runs at the *median* rate (fresh device)
-                    heapq.heappush(events, (now + med, next(seq), "task_done", dup))
-                    n_spec += 1
-
-    try_dispatch()
-    while events:
-        now, _, kind, payload = heapq.heappop(events)
-        if kind == "device_failure":
-            n = payload
-            pool = max(free, key=lambda p: free[p])
-            free[pool] = max(0, free[pool] - n)
-            try_dispatch()
-            continue
-        task = payload
-        if task.uid not in running:      # canceled (spec-exec race)
-            continue
-        del running[task.uid]
-        free[pool_of(task)] += task.desc.ranks
-        primary_uid = task.speculative_of if task.speculative_of is not None else task.uid
-
-        if kind == "task_fail" and task.speculative_of is None:
-            task.retries += 1
-            n_retries += 1
-            if task.retries <= task.desc.max_retries:
-                task.state = TaskState.PENDING
-                pending.append(task)
-            else:
-                task.state = TaskState.FAILED
-                task.end_time = now
-            try_dispatch()
-            continue
-
-        if primary_uid in finished_uids:
-            try_dispatch()
-            continue
-        finished_uids.add(primary_uid)
-        # cancel the twin (primary or duplicate) if still running
-        for r in list(running.values()):
-            if r.uid == primary_uid or r.speculative_of == primary_uid:
-                free[pool_of(r)] += r.desc.ranks
-                r.state = TaskState.CANCELED
-                del running[r.uid]
-        target = task if task.speculative_of is None else \
-            next(t for t in tasks if t.uid == primary_uid)
-        target.state = TaskState.DONE
-        target.end_time = now
-        done_durations.setdefault(target.desc.name, []).append(
-            now - target.start_time)
-        maybe_speculate()
-        try_dispatch()
-
-    per_pipeline: dict[str, float] = {}
-    for t in tasks:
-        if t.state == TaskState.DONE:
-            key = t.desc.tags.get("pipeline", "default")
-            per_pipeline[key] = max(per_pipeline.get(key, 0.0), t.end_time)
-    makespan = max((t.end_time for t in tasks if t.state == TaskState.DONE),
-                   default=0.0)
-    return SimReport(makespan=makespan, tasks=tasks,
-                     overhead_total=overhead_total, per_pipeline=per_pipeline,
-                     n_speculative=n_spec, n_retries=n_retries)
+    opts = opts or SimOptions()
+    rm = ResourceManager(list(range(n_devices)))
+    sess = SchedulerSession(VirtualClockExecutor(opts), rm,
+                            policy=opts.policy,
+                            speculative_factor=opts.speculative_factor)
+    return sess.run(descs)
 
 
-# ---------------------------------------------------------------------------
-# live scheduler: real JAX devices, thread-dispatched SPMD payloads
-# ---------------------------------------------------------------------------
 class LiveScheduler:
     """Runs TaskDescriptions on real devices.  fn(comm, *args) is executed in
     a worker thread with a freshly built private Communicator; released
     devices backfill pending tasks (heterogeneous policy) or stay inside
-    their pipeline partition (batch policy)."""
+    their pipeline partition (batch policy).
 
-    def __init__(self, resource_manager, policy: str = HETEROGENEOUS):
-        from repro.core.pilot import ResourceManager
+    Thin facade over ``SchedulerSession`` + ``ThreadExecutor`` — the same
+    dispatch/retry/spec-exec code path as ``simulate``."""
+
+    def __init__(self, resource_manager: ResourceManager,
+                 policy: str = HETEROGENEOUS,
+                 speculative_factor: Optional[float] = None):
         self.rm = resource_manager
         self.policy = policy
+        self.speculative_factor = speculative_factor
         self.tasks: list[Task] = []
-        self._partitions: Optional[dict] = None
 
-    def run(self, descs: Sequence[TaskDescription], timeout: float = 600.0):
-        import queue
-        import threading
-        import time as _time
-
-        from repro.core.communicator import build_communicator
-        from repro.core.pilot import ResourceManager
-
-        tasks = [Task(desc=d) for d in descs]
-        for t in tasks:
-            t.state = TaskState.PENDING
-            t.submit_time = _time.perf_counter()
-        self.tasks = tasks
-
-        if self.policy == BATCH:
-            pipes = sorted({t.desc.tags.get("pipeline", "default") for t in tasks})
-            share = self.rm.total // len(pipes)
-            devs = self.rm.allocate(share * len(pipes))
-            pools = {p: ResourceManager(devs[i * share:(i + 1) * share])
-                     for i, p in enumerate(pipes)}
-        else:
-            pools = {"_shared": self.rm}
-
-        def pool_of(t):
-            return pools[t.desc.tags.get("pipeline", "default")
-                         if self.policy == BATCH else "_shared"]
-
-        doneq: "queue.Queue" = queue.Queue()
-        pending = list(tasks)
-        n_running = 0
-
-        def worker(task: Task, devices):
-            try:
-                comm = build_communicator(devices, task.desc.mesh_axes,
-                                          task.desc.mesh_shape,
-                                          uid=f"task{task.uid}")
-                task.comm_build_time = comm.build_seconds
-                res = task.desc.fn(comm, *task.desc.args, **task.desc.kwargs)
-                doneq.put((task, devices, res, None))
-            except Exception as e:  # noqa: BLE001 — report any payload error
-                doneq.put((task, devices, None, f"{type(e).__name__}: {e}"))
-
-        def try_dispatch():
-            nonlocal n_running
-            for task in interleave_by_pipeline(list(pending)):
-                pool = pool_of(task)
-                if pool.n_free >= task.desc.ranks:
-                    devices = pool.allocate(task.desc.ranks)
-                    pending.remove(task)
-                    task.state = TaskState.RUNNING
-                    task.start_time = _time.perf_counter()
-                    task.devices = devices
-                    n_running += 1
-                    threading.Thread(target=worker, args=(task, devices),
-                                     daemon=True).start()
-
-        t_start = _time.perf_counter()
-        try_dispatch()
-        while (pending or n_running) and _time.perf_counter() - t_start < timeout:
-            try:
-                task, devices, res, err = doneq.get(timeout=1.0)
-            except Exception:
-                continue
-            n_running -= 1
-            pool_of(task).release(devices)
-            task.end_time = _time.perf_counter()
-            if err is None:
-                task.state = TaskState.DONE
-                task.result = res
-            else:
-                task.retries += 1
-                if task.retries <= task.desc.max_retries:
-                    task.state = TaskState.PENDING
-                    pending.append(task)
-                else:
-                    task.state = TaskState.FAILED
-                    task.error = err
-            try_dispatch()
-
-        makespan = max((t.end_time for t in tasks if t.state == TaskState.DONE),
-                       default=_time.perf_counter()) - t_start
-        return SimReport(
-            makespan=makespan, tasks=tasks,
-            overhead_total=sum(t.comm_build_time for t in tasks),
-            per_pipeline={}, n_retries=sum(t.retries for t in tasks))
+    def run(self, descs: Sequence[TaskDescription],
+            timeout: float = 600.0) -> SimReport:
+        sess = SchedulerSession(ThreadExecutor(), self.rm, policy=self.policy,
+                                speculative_factor=self.speculative_factor)
+        rep = sess.run(descs, timeout=timeout)
+        self.tasks = rep.tasks
+        return rep

@@ -55,6 +55,8 @@ class Task:
     comm_build_time: float = 0.0     # "overhead" column of paper Table 2
     devices: tuple = ()
     speculative_of: Optional[int] = None   # uid of the task this duplicates
+    excluded_devices: set = dataclasses.field(default_factory=set)
+    # devices prior attempts failed on; retries avoid them when possible
 
     @property
     def run_seconds(self) -> float:

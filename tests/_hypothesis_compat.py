@@ -1,0 +1,31 @@
+"""Optional-hypothesis guard: property-based tests skip cleanly when
+``hypothesis`` is not installed, while the plain tests in the same module
+keep running (a bare ``pytest.importorskip`` at module scope would skip the
+whole file, losing the non-property tests)."""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal images
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: any strategy expression
+        evaluates to None so module-level ``@given(st.xxx(...))`` decorators
+        still parse."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

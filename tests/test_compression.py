@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.distributed.compression import (
     dequantize_int8, quantize_int8, tree_compressed_psum_mean,
@@ -25,6 +25,7 @@ def test_quantize_roundtrip_error_bounded(n, seed):
     assert (err <= bound + 1e-6).all()
 
 
+@pytest.mark.integration
 def test_compressed_mean_subprocess():
     from tests._subproc import run_with_devices
     out = run_with_devices(r"""

@@ -1,8 +1,8 @@
 """Local dataframe operators vs numpy oracles — hypothesis property tests."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.dataframe import ops_local as L
 from repro.dataframe import reference as R

@@ -20,11 +20,14 @@ from repro.kernels.ssm_scan.ref import ssm_scan_ref
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("b,s,h,kh,hd", [
     (1, 128, 4, 4, 32),      # MHA
-    (2, 256, 8, 2, 64),      # GQA 4x
-    (1, 130, 8, 8, 32),      # unaligned seq (padding path)
-    (2, 384, 6, 3, 128),     # GQA 2x, large head_dim
+    pytest.param(2, 256, 8, 2, 64, marks=pytest.mark.slow),   # GQA 4x
+    pytest.param(1, 130, 8, 8, 32, marks=pytest.mark.slow),   # unaligned seq
+    pytest.param(2, 384, 6, 3, 128, marks=pytest.mark.slow),  # large head_dim
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 def test_flash_attention_sweep(b, s, h, kh, hd, dtype):
     ks = jax.random.split(jax.random.key(0), 3)
     q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
@@ -45,10 +48,13 @@ def test_flash_attention_sweep(b, s, h, kh, hd, dtype):
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("B,S,D,N,dblk,chunk", [
     (1, 64, 32, 8, 16, 16),
-    (2, 128, 64, 16, 32, 64),
-    (1, 96, 48, 4, 48, 32),
+    pytest.param(2, 128, 64, 16, 32, 64, marks=pytest.mark.slow),
+    pytest.param(1, 96, 48, 4, 48, 32, marks=pytest.mark.slow),
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 def test_ssm_scan_sweep(B, S, D, N, dblk, chunk, dtype):
     ks = jax.random.split(jax.random.key(1), 5)
     dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, D))).astype(dtype)
@@ -65,6 +71,7 @@ def test_ssm_scan_sweep(B, S, D, N, dblk, chunk, dtype):
 # ---------------------------------------------------------------------------
 # bitonic sort
 # ---------------------------------------------------------------------------
+@pytest.mark.slow  # interpret-mode bitonic passes are minutes-each on CPU
 @pytest.mark.parametrize("rows,n", [(1, 64), (4, 100), (2, 256), (3, 17)])
 @pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
 def test_bitonic_sort_sweep(rows, n, dtype):
@@ -85,7 +92,10 @@ def test_bitonic_sort_sweep(rows, n, dtype):
 # radix partition
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("n,buckets,block", [
-    (256, 4, 64), (1000, 16, 256), (64, 8, 64), (513, 7, 128),
+    pytest.param(256, 4, 64, marks=pytest.mark.slow),
+    pytest.param(1000, 16, 256, marks=pytest.mark.slow),
+    (64, 8, 64),
+    pytest.param(513, 7, 128, marks=pytest.mark.slow),
 ])
 def test_radix_partition_sweep(n, buckets, block):
     b = jax.random.randint(jax.random.key(3), (n,), 0, buckets, jnp.int32)

@@ -2,8 +2,8 @@
 hypothesis property tests over random task mixes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import (
     BATCH, HETEROGENEOUS, PilotDescription, PilotManager, ResourceManager,

@@ -1,0 +1,282 @@
+"""Unified scheduler core: the SAME dispatch/retry/spec-exec code must drive
+both the virtual clock (VirtualClockExecutor) and real threads
+(ThreadExecutor), and DAG stages must be released continuously — the moment
+their own deps complete — rather than in waves with barriers."""
+import inspect
+import time
+
+import pytest
+
+from repro.core import (
+    BATCH, HETEROGENEOUS, InsufficientResources, Pipeline, ResourceManager,
+    SchedulerSession, SimOptions, TaskDescription, TaskState, ThreadExecutor,
+    VirtualClockExecutor, run_pipelines, simulate,
+)
+
+
+def _sim_descs(specs):
+    return [TaskDescription(name=n, ranks=1, fn=None,
+                            duration_model=(lambda r, d=dur: d),
+                            tags={"pipeline": pipe})
+            for n, pipe, dur in specs]
+
+
+def _live_descs(specs, sleep_scale=0.02):
+    def mk(dur):
+        return lambda comm: time.sleep(dur * sleep_scale) or dur
+    return [TaskDescription(name=n, ranks=1, fn=mk(dur),
+                            tags={"pipeline": pipe})
+            for n, pipe, dur in specs]
+
+
+def _key_trace(report, kinds=("submit", "dispatch", "done")):
+    return [(e.kind, e.task) for e in report.trace if e.kind in kinds]
+
+
+def test_dispatch_order_identical_across_executors():
+    """A deterministic workload serialized on a single device must produce
+    the same submit/dispatch/done event order under the virtual clock and
+    under real threads — one scheduler implementation, two executors."""
+    specs = [("p0", "p", 3.0), ("p1", "p", 1.0),
+             ("q0", "q", 2.0), ("q1", "q", 4.0)]
+
+    sim = SchedulerSession(
+        VirtualClockExecutor(SimOptions(noise=0.0)),
+        ResourceManager([0]))
+    sim_rep = sim.run(_sim_descs(specs))
+
+    live = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01),
+                            ResourceManager(["dev0"]))
+    live_rep = live.run(_live_descs(specs), timeout=60)
+
+    assert all(t.state == TaskState.DONE for t in sim_rep.tasks)
+    assert all(t.state == TaskState.DONE for t in live_rep.tasks)
+    assert _key_trace(sim_rep) == _key_trace(live_rep)
+    dispatch_order = [e.task for e in sim_rep.trace if e.kind == "dispatch"]
+    assert dispatch_order == ["p0", "p1", "q0", "q1"]
+
+
+def test_continuous_release_sim():
+    """A dependent stage must start the moment its OWN dep completes, while
+    an unrelated sibling stage from another pipeline is still running.
+    Under the old wave-barrier run_pipelines, stage b could not start until
+    the whole {a, c} wave drained (t=10); continuously released it starts at
+    t=1."""
+    P = Pipeline("P")
+    P.add("a", 1, duration_model=lambda r: 1.0)
+    P.add("b", 1, duration_model=lambda r: 1.0, deps=["a"])
+    Q = Pipeline("Q")
+    Q.add("c", 1, duration_model=lambda r: 10.0)
+
+    rm = ResourceManager(list(range(2)))
+    ex = VirtualClockExecutor(SimOptions(noise=0.0,
+                                         overhead_model=lambda r: 0.0))
+    _, rep = run_pipelines([P, Q], rm, executor=ex, timeout=1e9)
+    by = {t.desc.name: t for t in rep.tasks}
+    assert by["P.b"].start_time == pytest.approx(1.0)
+    assert by["Q.c"].end_time == pytest.approx(10.0)
+    # the defining assertion: b ran while the unrelated sibling c was running
+    assert by["P.b"].start_time < by["Q.c"].end_time
+    assert rep.makespan == pytest.approx(10.0)   # wave barrier would give 11
+
+
+def test_continuous_release_live():
+    """Same property on the thread executor with real concurrency."""
+    P = Pipeline("P")
+    P.add("a", 1, fn=lambda c: time.sleep(0.05) or "a")
+    P.add("b", 1, fn=lambda c, a: time.sleep(0.05) or a + "b", deps=["a"])
+    Q = Pipeline("Q")
+    Q.add("c", 1, fn=lambda c: time.sleep(0.8) or "c")
+
+    rm = ResourceManager(["d0", "d1"])
+    results, rep = run_pipelines([P, Q], rm,
+                                 executor=ThreadExecutor(build_comm=False,
+                                                         tick=0.01),
+                                 timeout=60)
+    assert results[("P", "b")] == "ab"
+    by = {t.desc.name: t for t in rep.tasks}
+    assert by["P.b"].start_time < by["Q.c"].end_time
+    assert by["P.b"].end_time < by["Q.c"].end_time
+
+
+def test_batch_policy_insufficient_partition_raises():
+    """3 pipelines over 2 devices -> 0 devices per static partition: must
+    raise instead of spinning until timeout with undispatchable tasks."""
+    descs = [TaskDescription(name=f"t{i}", ranks=1, fn=None,
+                             duration_model=lambda r: 1.0,
+                             tags={"pipeline": f"pipe{i}"}) for i in range(3)]
+    with pytest.raises(InsufficientResources):
+        simulate(descs, 2, SimOptions(policy=BATCH, noise=0.0))
+
+
+def test_simulate_default_options_not_shared():
+    """simulate()'s options default must not be a mutable shared instance."""
+    assert inspect.signature(simulate).parameters["opts"].default is None
+    descs = lambda: [TaskDescription(  # noqa: E731
+        name="t", ranks=1, fn=None, duration_model=lambda r: 1.0,
+        tags={"pipeline": "p"})]
+    a = simulate(descs(), 2)
+    b = simulate(descs(), 2)
+    assert a.makespan == b.makespan
+
+
+def test_live_retry_excludes_failed_device():
+    """Live mode gains retry-with-device-exclusion from the unified core:
+    after an attempt fails on a device, the retry prefers a different one."""
+    seen = []
+
+    def flaky(comm):
+        dev = comm.devices[0]
+        seen.append(dev)
+        if dev == "bad":
+            raise RuntimeError("device is bad")
+        return "ok"
+
+    rm = ResourceManager(["bad", "good"])
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01), rm)
+    rep = sess.run([TaskDescription(name="f", ranks=1, fn=flaky,
+                                    max_retries=2,
+                                    tags={"pipeline": "p"})], timeout=60)
+    task = rep.tasks[0]
+    assert task.state == TaskState.DONE
+    assert seen[0] == "bad" and seen[-1] == "good"
+    assert "bad" in task.excluded_devices
+
+
+def test_live_speculative_reexecution():
+    """Live mode gains straggler detection + spec-exec from the unified
+    core: a straggling task is duplicated onto a free device and the run
+    finishes at the duplicate's (fast) pace."""
+    calls = {"n": 0}
+
+    def work(comm):
+        calls["n"] += 1
+        # the 4th launch of this task name is the straggler; its speculative
+        # duplicate (5th call) runs fast
+        time.sleep(2.5 if calls["n"] == 4 else 0.05)
+        return calls["n"]
+
+    descs = [TaskDescription(name="w", ranks=1, fn=work,
+                             tags={"pipeline": "p"}) for _ in range(4)]
+    rm = ResourceManager(["d0", "d1"])
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.02), rm,
+                            speculative_factor=2.0)
+    t0 = time.perf_counter()
+    rep = sess.run(descs, timeout=60)
+    wall = time.perf_counter() - t0
+    assert all(t.state == TaskState.DONE for t in rep.tasks)
+    assert rep.n_speculative >= 1
+    assert wall < 2.0, f"spec-exec should beat the 2.5s straggler, took {wall}"
+
+
+def test_failed_speculative_duplicate_does_not_kill_primary():
+    """If the speculative duplicate itself dies, the straggling primary must
+    keep running and deliver the real result (not be cancelled / credited
+    with the duplicate's None)."""
+    calls = {"n": 0}
+
+    def work(comm):
+        calls["n"] += 1
+        n = calls["n"]
+        if n == 4:                    # the straggler (primary keeps running)
+            time.sleep(0.6)
+            return "primary"
+        if n == 5:                    # its speculative duplicate dies
+            raise RuntimeError("dup dies")
+        time.sleep(0.05)
+        return "fast"
+
+    descs = [TaskDescription(name="w", ranks=1, fn=work,
+                             tags={"pipeline": "p"}) for _ in range(4)]
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.02),
+                            ResourceManager(["d0", "d1"]),
+                            speculative_factor=2.0)
+    rep = sess.run(descs, timeout=60)
+    assert all(t.state == TaskState.DONE for t in rep.tasks)
+    assert rep.n_speculative >= 1
+    # before the dup-failure guard, the dying duplicate cancelled the primary
+    # and credited it DONE with result=None
+    results = [t.result for t in rep.tasks]
+    assert None not in results
+    # the straggler finished via its own run or a later (healthy) duplicate
+    assert set(results) <= {"fast", "primary"}
+
+
+def test_elastic_grow_backfills_pending_live():
+    """Elastic pool grow: a task too big for the initial pool dispatches
+    as soon as devices are added mid-run."""
+    rm = ResourceManager(["d0"])
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01), rm)
+    sess.submit([TaskDescription(name="small", ranks=1,
+                                 fn=lambda c: time.sleep(0.05) or "s",
+                                 tags={"pipeline": "p"}),
+                 TaskDescription(name="big", ranks=2,
+                                 fn=lambda c: "b", tags={"pipeline": "p"})])
+    rm.add_devices(["d1"])
+    rep = sess.drain(timeout=60).close()
+    states = {t.desc.name: t.state for t in rep.tasks}
+    assert states == {"small": TaskState.DONE, "big": TaskState.DONE}
+
+
+def test_batch_close_does_not_release_busy_devices():
+    """If run_pipelines tears down after a stage failure while a sibling
+    pipeline's task is mid-execution, the busy device must NOT be handed
+    back to the parent pool (it would be double-issued)."""
+    import threading
+    release = threading.Event()
+    P = Pipeline("P")
+    P.add("bad", 1, fn=lambda c: (_ for _ in ()).throw(RuntimeError("boom")))
+    Q = Pipeline("Q")
+    Q.add("slow", 1, fn=lambda c: release.wait(5) or "ok")
+    rm = ResourceManager(["d0", "d1"])
+    with pytest.raises(RuntimeError):
+        run_pipelines([P, Q], rm, policy=BATCH,
+                      executor=ThreadExecutor(build_comm=False, tick=0.01),
+                      timeout=10)
+    assert rm.n_free == 1    # only the failed pipeline's partition returns
+    release.set()
+
+
+def test_batch_close_propagates_failed_devices():
+    """Devices that died during a BATCH session must stay dead in the parent
+    pool after close() (not be resurrected by the partition hand-back)."""
+    descs = [TaskDescription(name=f"t{p}", ranks=1, fn=None,
+                             duration_model=lambda r: 10.0,
+                             tags={"pipeline": p}) for p in ("a", "b")]
+    rm = ResourceManager(list(range(4)))
+    opts = SimOptions(policy=BATCH, noise=0.0, device_failures=[(1.0, 1)])
+    sess = SchedulerSession(VirtualClockExecutor(opts), rm, policy=BATCH)
+    rep = sess.run(descs)
+    assert all(t.state == TaskState.DONE for t in rep.tasks)
+    assert rm.total == 3     # the dead device is gone from the parent too
+    assert rm.n_free == 3
+
+
+def test_event_trace_schema():
+    """Every lifecycle step appears in the trace with the documented kinds
+    and a per-task submit->dispatch->comm_build->done ordering."""
+    descs = [TaskDescription(name=f"t{i}", ranks=2, fn=None,
+                             duration_model=lambda r: 5.0,
+                             tags={"pipeline": "p"}) for i in range(3)]
+    rep = simulate(descs, 4, SimOptions(noise=0.0))
+    assert len(rep.events("submit")) == 3
+    assert len(rep.events("dispatch")) == 3
+    assert len(rep.events("comm_build")) == 3
+    assert len(rep.events("done")) == 3
+    per_uid = {}
+    for e in rep.trace:
+        per_uid.setdefault(e.uid, []).append(e.kind)
+    for kinds in per_uid.values():
+        assert kinds == ["submit", "dispatch", "comm_build", "done"]
+    assert rep.overhead_total == pytest.approx(
+        sum(e.value for e in rep.events("comm_build")))
+
+
+def test_same_core_reports_device_failure_trace():
+    rep = simulate(
+        [TaskDescription(name=f"t{i}", ranks=2, fn=None,
+                         duration_model=lambda r: 10.0,
+                         tags={"pipeline": "p"}) for i in range(4)],
+        8, SimOptions(noise=0.0, device_failures=[(1.0, 2)]))
+    assert len(rep.events("device_failure")) == 1
+    assert all(t.state == TaskState.DONE for t in rep.tasks)

@@ -95,6 +95,7 @@ def test_cache_specs_decode32k():
 # ---------------------------------------------------------------------------
 # HLO collective parser (roofline input) on programs with KNOWN collectives
 # ---------------------------------------------------------------------------
+@pytest.mark.integration
 def test_parse_collectives_known_psum():
     from tests._subproc import run_with_devices
     out = run_with_devices(r"""
