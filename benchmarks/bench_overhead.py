@@ -11,8 +11,10 @@ band), matching the paper's flat overhead column.
 from __future__ import annotations
 
 import json
+import os
+import sys
 
-from benchmarks.common import emit, run_with_devices, trace_summary
+from benchmarks.common import ROOT, emit, run_with_devices, trace_summary
 from repro.core import SimOptions, TaskDescription, simulate
 
 RANKS = [148, 222, 296, 370, 444, 518]
@@ -64,6 +66,57 @@ def sim_trace_overhead():
     return rows
 
 
+def _nop(comm):
+    return 0
+
+
+def _dispatch_latencies(report) -> list:
+    disp = {e.uid: e.t for e in report.trace if e.kind == "dispatch"}
+    return [e.t - disp[e.uid] for e in report.trace
+            if e.kind == "done" and e.uid in disp]
+
+
+def proc_dispatch_overhead(n_tasks: int = 24):
+    """Paper §5 'minimal and constant overhead' claim for the MULTI-PROCESS
+    pilot: round-trip dispatch->done latency of no-op tasks through
+    ProcessExecutor (pickle over the wire, cross-process scheduling) vs the
+    in-process ThreadExecutor baseline, at two workload sizes to show the
+    per-task cost does not grow with the task count."""
+    import statistics
+
+    from repro.core import (ProcessExecutor, ResourceManager,
+                            SchedulerSession, ThreadExecutor)
+
+    def descs(n):
+        return [TaskDescription(name=f"nop{i}", ranks=1, fn=_nop,
+                                tags={"pipeline": "bench"}) for i in range(n)]
+
+    rows = []
+    with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                         build_comm=False, tick=0.005,
+                         extra_pythonpath=[str(ROOT)]) as ex:
+        # warm-up: first dispatch per worker pays payload-import costs
+        SchedulerSession(ex, ex.resource_manager(),
+                         tick=0.005).run(descs(2), timeout=120)
+        for n in (max(n_tasks // 3, 4), n_tasks):
+            sess = SchedulerSession(ThreadExecutor(build_comm=False,
+                                                   tick=0.005),
+                                    ResourceManager(["d0", "d1"]), tick=0.005)
+            thr = statistics.median(
+                _dispatch_latencies(sess.run(descs(n), timeout=120)))
+            sess = SchedulerSession(ex, ex.resource_manager(), tick=0.005)
+            prc = statistics.median(
+                _dispatch_latencies(sess.run(descs(n), timeout=120)))
+            emit(f"overhead/proc_dispatch/n={n}", prc * 1e6,
+                 f"thread_us={thr * 1e6:.1f};ratio={prc / max(thr, 1e-9):.1f}")
+            rows.append({"n_tasks": n, "proc_us": prc * 1e6,
+                         "thread_us": thr * 1e6})
+    flat = rows[-1]["proc_us"] / max(rows[0]["proc_us"], 1e-9)
+    emit("overhead/proc_dispatch/flatness_ratio", flat * 1e6,
+         "paper_claims_constant;per_task_latency_large_over_small")
+    return rows
+
+
 def run():
     out = run_with_devices(SNIPPET.replace("%RANKS%", str(RANKS)), 544,
                            timeout=900)  # 544 > 518 max paper rank count
@@ -75,7 +128,11 @@ def run():
     flat = max(builds) / max(min(builds), 1e-9)
     emit("overhead/flatness_ratio", flat * 1e6,
          "paper_claims_constant;ratio_max_over_min")
-    return {"real": data, "sim_trace": sim_trace_overhead()}
+    res = {"real": data, "sim_trace": sim_trace_overhead()}
+    if os.environ.get("BENCH_PROC", "0") == "1" or "--proc" in sys.argv:
+        # opt-in: spawns worker interpreters, adds ~5s to the section
+        res["proc_dispatch"] = proc_dispatch_overhead()
+    return res
 
 
 if __name__ == "__main__":

@@ -1,7 +1,11 @@
 """Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
-dry-run artifacts (idempotent: replaces text between AUTOGEN markers)."""
+dry-run artifacts (idempotent: replaces text between AUTOGEN markers), plus
+``trace_gantt``: a per-device ASCII timeline + utilization rendered straight
+from a SimReport's TraceEvent stream (works for virtual-clock, thread, and
+process executors alike — they all emit the same schema)."""
 from __future__ import annotations
 
+import heapq
 import json
 import re
 import sys
@@ -9,6 +13,85 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
 ART = ROOT / "benchmarks" / "artifacts" / "dryrun"
+
+_GANTT_CHARS = "ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789"
+
+
+def trace_gantt(report, width: int = 64) -> str:
+    """Markdown Gantt of device occupancy from ``report.trace``.
+
+    Device *lanes* are reconstructed from the event stream: a dispatch (or
+    speculate) occupies ``ranks`` lanes until that task's done/fail/cancel/
+    retry event frees them — the same assignment the ResourceManager made,
+    modulo lane naming.  Returns a legend, one row per lane with its busy
+    fraction, and the overall utilization percentage."""
+    events = sorted(report.trace, key=lambda e: e.t)
+    if not events:
+        return "(empty trace)"
+    free: list = []                     # min-heap of free lane ids
+    next_lane = 0
+    open_by_uid: dict = {}        # uid -> (lanes, t_start, task name, spec)
+    intervals: list = []                # (lane, t0, t1, task name)
+
+    def close(uid, t):
+        lanes, t_start, name, _ = open_by_uid.pop(uid)
+        for ln in lanes:
+            intervals.append((ln, t_start, t, name))
+            heapq.heappush(free, ln)
+
+    for e in events:
+        if e.kind in ("dispatch", "speculate"):
+            lanes = []
+            for _ in range(max(e.ranks, 1)):
+                if free:
+                    lanes.append(heapq.heappop(free))
+                else:
+                    lanes.append(next_lane)
+                    next_lane += 1
+            open_by_uid[e.uid] = (lanes, e.t, e.task, e.kind == "speculate")
+        elif e.kind in ("done", "fail", "cancel", "retry"):
+            if e.uid in open_by_uid:
+                close(e.uid, e.t)
+            if e.kind == "done":
+                # a spec-exec duplicate's completion is credited to the
+                # PRIMARY's uid, so the duplicate's speculate-opened lanes
+                # would otherwise leak.  Only sweep speculate-opened twins:
+                # concurrent ordinary tasks may legitimately share a name.
+                for uid in [u for u, v in open_by_uid.items()
+                            if v[2] == e.task and v[3]]:
+                    close(uid, e.t)
+    t0 = events[0].t
+    t1 = max(e.t for e in events)
+    for uid in list(open_by_uid):       # still running at trace end
+        close(uid, t1)
+    span = t1 - t0
+    if span <= 0 or not intervals:
+        return "(no occupancy to render)"
+
+    names = []
+    for _, _, _, name in intervals:
+        if name not in names:
+            names.append(name)
+    char_of = {n: _GANTT_CHARS[i % len(_GANTT_CHARS)]
+               for i, n in enumerate(names)}
+    n_lanes = max(ln for ln, *_ in intervals) + 1
+    rows = [["·"] * width for _ in range(n_lanes)]
+    busy = [0.0] * n_lanes
+    for ln, a, b, name in intervals:
+        busy[ln] += b - a
+        lo = int((a - t0) / span * width)
+        hi = max(int((b - t0) / span * width), lo + 1)
+        for c in range(lo, min(hi, width)):
+            rows[ln][c] = char_of[name]
+    legend = "  ".join(f"{char_of[n]}={n}" for n in names)
+    out = [f"trace gantt  (span {span:.3f}s, {n_lanes} devices)",
+           legend, "```"]
+    for ln in range(n_lanes):
+        out.append(f"dev{ln:<3d} |{''.join(rows[ln])}| "
+                   f"{busy[ln] / span * 100:5.1f}%")
+    util = sum(busy) / (n_lanes * span) * 100
+    out += ["```", f"overall utilization: {util:.1f}%"]
+    return "\n".join(out)
 
 
 def dryrun_table(mesh: str, tag: str = "baseline") -> str:

@@ -11,9 +11,9 @@ from repro.core.pilot import (
 from repro.core.pipeline import Pipeline, Stage, run_pipelines
 from repro.core.raptor import RaptorMaster, session
 from repro.core.scheduler import (
-    BATCH, HETEROGENEOUS, ExecEvent, Executor, LiveScheduler,
-    SchedulerSession, SimOptions, SimReport, StubComm, ThreadExecutor,
-    TraceEvent, VirtualClockExecutor, default_overhead_model,
+    BATCH, HETEROGENEOUS, ExecEvent, Executor, LiveScheduler, ProcDevice,
+    ProcessExecutor, SchedulerSession, SimOptions, SimReport, StubComm,
+    ThreadExecutor, TraceEvent, VirtualClockExecutor, default_overhead_model,
     interleave_by_pipeline, simulate,
 )
 from repro.core.task import Task, TaskDescription, TaskState
@@ -21,9 +21,10 @@ from repro.core.task import Task, TaskDescription, TaskState
 __all__ = [
     "BATCH", "HETEROGENEOUS", "Communicator", "ExecEvent", "Executor",
     "InsufficientResources", "LiveScheduler", "Pilot", "PilotDescription",
-    "PilotManager", "Pipeline", "RaptorMaster", "ResourceManager",
-    "SchedulerSession", "SimOptions", "SimReport", "Stage", "StubComm",
-    "Task", "TaskDescription", "TaskState", "ThreadExecutor", "TraceEvent",
-    "VirtualClockExecutor", "build_communicator", "default_overhead_model",
-    "interleave_by_pipeline", "run_pipelines", "session", "simulate",
+    "PilotManager", "Pipeline", "ProcDevice", "ProcessExecutor",
+    "RaptorMaster", "ResourceManager", "SchedulerSession", "SimOptions",
+    "SimReport", "Stage", "StubComm", "Task", "TaskDescription", "TaskState",
+    "ThreadExecutor", "TraceEvent", "VirtualClockExecutor",
+    "build_communicator", "default_overhead_model", "interleave_by_pipeline",
+    "run_pipelines", "session", "simulate",
 ]

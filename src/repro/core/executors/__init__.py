@@ -1,0 +1,23 @@
+"""Executor backends behind the unified scheduler core.
+
+* ``VirtualClockExecutor`` — deterministic event heap (paper-scale sims).
+* ``ThreadExecutor`` — worker threads on this process's JAX devices.
+* ``ProcessExecutor`` — one fresh interpreter per node, devices spanning
+  processes, wire-protocol task shipping, heartbeat liveness (the paper's
+  distributed pilot runtime).
+
+``repro.core.scheduler`` re-exports all of these, so historical imports
+(``from repro.core.scheduler import ThreadExecutor``) keep working.
+"""
+from repro.core.executors.base import ExecEvent, Executor
+from repro.core.executors.proc import ProcDevice, ProcessExecutor
+from repro.core.executors.thread import StubComm, ThreadExecutor
+from repro.core.executors.virtual import (
+    SimOptions, VirtualClockExecutor, default_overhead_model,
+)
+
+__all__ = [
+    "ExecEvent", "Executor", "ProcDevice", "ProcessExecutor", "SimOptions",
+    "StubComm", "ThreadExecutor", "VirtualClockExecutor",
+    "default_overhead_model",
+]

@@ -1,0 +1,103 @@
+"""Executor interface: the seam between the scheduler core (policy, retry,
+spec-exec, pool handling) and the mechanics of actually running one task.
+
+Three backends live behind this interface:
+
+* ``VirtualClockExecutor`` (``virtual.py``) — deterministic event heap.
+* ``ThreadExecutor`` (``thread.py``) — worker threads in this process.
+* ``ProcessExecutor`` (``proc.py``) — one fresh interpreter per "node",
+  devices spanning processes, heartbeat liveness (the paper's multi-node
+  pilot runtime).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import queue as _queue
+import time as _time
+from typing import Any, Optional
+
+from repro.core.task import Task
+
+
+@dataclasses.dataclass
+class ExecEvent:
+    """What an executor delivers back to the scheduler core."""
+    kind: str                      # done|fail|tick|device_failure
+    task: Optional[Task] = None
+    result: Any = None
+    error: Optional[str] = None
+    comm_build_s: float = 0.0
+    n_devices: int = 0             # device_failure payload
+    devices: tuple = ()            # device_failure: the EXACT devices lost
+    # (empty -> the core shrinks the pool by n_devices arbitrary free
+    # devices, the virtual-clock injection semantics; non-empty -> those
+    # specific handles die wherever they are, busy or free — how a process
+    # executor reports a crashed worker's inventory)
+
+
+class Executor(abc.ABC):
+    """Runs one task at a time on behalf of the scheduler core.
+
+    The core allocates ``task.devices`` from the policy pools, then calls
+    ``launch``; the executor later delivers exactly one ``done``/``fail``
+    ExecEvent per launch via ``poll`` (unless ``cancel`` returned True).
+    The executor also owns the clock: virtual seconds or wall time.
+    """
+
+    #: True when ``now()`` is wall time.  Scheduler timeouts are liveness
+    #: guards against hangs, so they are enforced only on wall-clock
+    #: executors — a virtual clock drains its event heap deterministically
+    #: and healthy simulations routinely span thousands of virtual seconds.
+    wall_clock: bool = True
+
+    @abc.abstractmethod
+    def now(self) -> float:
+        ...
+
+    @abc.abstractmethod
+    def launch(self, task: Task, duration_hint: Optional[float] = None):
+        """Begin executing ``task`` on ``task.devices``.  ``duration_hint``
+        is set for speculative duplicates (expected runtime on a healthy
+        device); the virtual clock honours it, live executors ignore it."""
+
+    @abc.abstractmethod
+    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
+        """Next event.  ``timeout == 0`` -> non-blocking (None if nothing is
+        ready *right now*; must not advance a virtual clock).  Otherwise a
+        live executor blocks up to ``timeout`` and returns a ``tick`` event
+        on expiry; a virtual executor returns the next event (advancing its
+        clock) or None when no event can ever arrive again."""
+
+    def cancel(self, task: Task) -> bool:
+        """Best-effort abort.  True -> the task is dead *now* and no event
+        will be delivered for it (core reclaims devices immediately).
+        False -> a completion event will still arrive later (live threads
+        cannot be killed; the core ignores the event and reclaims then)."""
+        return False
+
+
+class QueueEventExecutor(Executor):
+    """Shared wall-clock plumbing for live executors: completion events are
+    pushed onto ``self._q`` from worker threads (or socket readers) and
+    drained by ``poll`` with the tick-on-timeout contract the scheduler core
+    expects.  Subclasses set ``self.tick`` and call ``super().__init__()``.
+    """
+
+    def __init__(self):
+        self._q: "_queue.Queue[ExecEvent]" = _queue.Queue()
+
+    def now(self) -> float:
+        return _time.perf_counter()
+
+    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
+        if timeout == 0:
+            try:
+                return self._q.get_nowait()
+            except _queue.Empty:
+                return None
+        try:
+            return self._q.get(timeout=self.tick if timeout is None
+                               else min(timeout, self.tick))
+        except _queue.Empty:
+            return ExecEvent("tick")

@@ -1,0 +1,544 @@
+"""ProcessExecutor: the multi-process pilot runtime (paper's multi-node mode).
+
+One worker process per "node": a fresh interpreter launched with
+``--xla_force_host_platform_device_count=K`` so it owns K host devices (the
+pattern proven in ``tests/_subproc.py``).  The executor keeps a worker
+registry whose combined device inventory — :class:`ProcDevice` handles
+``worker:index`` — is what the scheduler's :class:`ResourceManager` carves
+up, so ALL scheduling policy stays in ``SchedulerSession`` unchanged.
+
+Task payloads are shipped as cloudpickle bytes over a length-prefixed socket
+protocol (``protocol.py``).  A task whose ranks span several workers is split
+into one *part* per worker; each part gets a :class:`ProcTaskComm` whose
+local sub-mesh covers that worker's share and whose ``allgather``/``bcast``/
+``barrier`` run through the hub here — the paper's heterogeneous communicator
+across nodes.  The task's result is part 0's (global rank 0) return value.
+
+Liveness is real, not injected: workers heartbeat; an EOF/reset on a worker
+channel or a stale heartbeat marks the worker lost, which surfaces as ONE
+``device_failure`` ExecEvent naming the exact dead devices plus a ``fail``
+event per task that had a part there — driving the scheduler's existing
+retry-with-exclusion / pool-shrink logic with true process isolation.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import secrets
+import shutil
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+import time as _time
+from pathlib import Path
+from typing import NamedTuple, Optional, Sequence, Union
+
+from repro.core.executors import protocol, serialize
+from repro.core.executors.base import ExecEvent, QueueEventExecutor
+from repro.core.executors.protocol import Channel, ConnectionClosed
+from repro.core.pilot import ResourceManager
+from repro.core.task import Task
+
+
+class ProcDevice(NamedTuple):
+    """One device slot owned by one worker process (hashable RM handle)."""
+    worker: str
+    index: int
+
+    def __repr__(self):
+        return f"{self.worker}:{self.index}"
+
+
+class _WorkerHandle:
+    def __init__(self, wid: str, proc: subprocess.Popen, n_devices: int,
+                 log_path: Path):
+        self.wid = wid
+        self.proc = proc
+        self.n_devices = n_devices
+        self.log_path = log_path
+        self.devices = tuple(ProcDevice(wid, i) for i in range(n_devices))
+        self.chan: Optional[Channel] = None
+        self.alive = False
+        self.last_hb = _time.monotonic()
+
+    def log_tail(self, n: int = 2000) -> str:
+        try:
+            return self.log_path.read_text(errors="replace")[-n:]
+        except OSError:
+            return "<no log>"
+
+
+class _RawResult:
+    """Still-serialized task result; materialized lazily in ``poll`` so the
+    per-worker reader thread never stalls on a large deserialization."""
+    __slots__ = ("data",)
+
+    def __init__(self, data: bytes):
+        self.data = data
+
+
+class _Tracker:
+    """In-flight task bookkeeping: which parts ran where, what came back.
+
+    ``attempt`` disambiguates retries: the scheduler reuses ``task.uid``
+    across attempts, so every frame carries (uid, attempt) and stale frames
+    from a failed attempt can never be credited to its retry.
+
+    The terminal event is delivered only once EVERY part is accounted for
+    (result, error, or hosted-on-a-dead-worker): the scheduler releases the
+    task's devices on that event, and a surviving sibling part may still be
+    computing on its devices — releasing early would double-issue them."""
+
+    def __init__(self, task: Task, part_workers: list, attempt: int):
+        self.task = task
+        self.part_workers = part_workers          # part index -> worker id
+        self.attempt = attempt
+        self.n_parts = len(part_workers)
+        self.results: list = [None] * self.n_parts
+        self.remaining = set(range(self.n_parts))
+        self.error: Optional[str] = None          # first part error wins
+        self.comm_build_s = 0.0
+        self.delivered = False
+
+
+class ProcessExecutor(QueueEventExecutor):
+    """Pilot-side runtime over ``n_workers`` fresh worker interpreters.
+
+    Usage::
+
+        with ProcessExecutor(n_workers=2, devices_per_worker=2) as ex:
+            rm = ex.resource_manager()
+            sess = SchedulerSession(ex, rm)
+            ...
+
+    ``devices_per_worker`` may be an int (homogeneous nodes) or a sequence
+    (heterogeneous inventory).  ``build_comm=False`` skips JAX mesh
+    construction in the workers (scheduling tests on logical devices).
+    ``extra_pythonpath`` entries are appended to the workers' PYTHONPATH so
+    payload functions defined in e.g. a test module stay importable.
+    """
+
+    def __init__(self, n_workers: int = 2,
+                 devices_per_worker: Union[int, Sequence[int]] = 2,
+                 build_comm: bool = True, tick: float = 0.05,
+                 heartbeat_interval: float = 0.5,
+                 heartbeat_timeout: Optional[float] = None,
+                 start_timeout: float = 120.0,
+                 python: str = sys.executable,
+                 env: Optional[dict] = None,
+                 extra_pythonpath: Sequence[str] = ()):
+        super().__init__()
+        if isinstance(devices_per_worker, int):
+            devices_per_worker = [devices_per_worker] * n_workers
+        assert len(devices_per_worker) == n_workers
+        self.build_comm = build_comm
+        self.tick = tick
+        self.hb_interval = heartbeat_interval
+        self.hb_timeout = heartbeat_timeout or max(5 * heartbeat_interval, 2.0)
+        self.start_timeout = start_timeout
+        self.python = python
+        self.env_override = dict(env or {})
+        self.extra_pythonpath = list(extra_pythonpath)
+        self._counts = list(devices_per_worker)
+        self.workers: dict[str, _WorkerHandle] = {}
+        self._running: dict[int, _Tracker] = {}
+        self._attempts = itertools.count()
+        self._coll: dict[tuple, dict] = {}  # (uid, attempt, seq) -> {part: b}
+        self._lock = threading.Lock()
+        self._started = False
+        self._closed = False
+        self._listener: Optional[socket.socket] = None
+        self._logdir: Optional[Path] = None
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def _worker_env(self, k: int) -> dict:
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform_device_count")]
+        flags.append(f"--xla_force_host_platform_device_count={k}")
+        env["XLA_FLAGS"] = " ".join(flags)
+        # host devices only exist on the CPU platform; never let a worker
+        # grab the parent's accelerator unless explicitly overridden
+        env["JAX_PLATFORMS"] = "cpu"
+        import repro
+        src = str(Path(repro.__file__).resolve().parents[1])
+        paths = [src, *self.extra_pythonpath]
+        if env.get("PYTHONPATH"):
+            paths.append(env["PYTHONPATH"])
+        env["PYTHONPATH"] = os.pathsep.join(paths)
+        env.update(self.env_override)
+        return env
+
+    def start(self) -> "ProcessExecutor":
+        if self._started:
+            return self
+        self._logdir = Path(tempfile.mkdtemp(prefix="repro-procexec-"))
+        token = secrets.token_hex(8)
+        lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        lst.bind(("127.0.0.1", 0))
+        lst.listen(len(self._counts))
+        lst.settimeout(1.0)
+        self._listener = lst
+        port = lst.getsockname()[1]
+        for i, k in enumerate(self._counts):
+            wid = f"w{i}"
+            log = self._logdir / f"{wid}.log"
+            with open(log, "wb") as logf:   # Popen dups the fd; close ours
+                proc = subprocess.Popen(
+                    [self.python, "-m", "repro.core.executors.worker",
+                     "--addr", f"127.0.0.1:{port}", "--worker", wid,
+                     "--n-devices", str(k),
+                     "--heartbeat", str(self.hb_interval), "--token", token],
+                    env=self._worker_env(k), stdout=logf,
+                    stderr=subprocess.STDOUT)
+            self.workers[wid] = _WorkerHandle(wid, proc, k, log)
+        deadline = _time.monotonic() + self.start_timeout
+        pending = set(self.workers)
+        while pending:
+            if _time.monotonic() > deadline:
+                self._kill_all()
+                raise RuntimeError(
+                    f"workers {sorted(pending)} did not register within "
+                    f"{self.start_timeout}s; first log tail:\n"
+                    f"{self.workers[sorted(pending)[0]].log_tail()}")
+            for wid in list(pending):
+                rc = self.workers[wid].proc.poll()
+                if rc is not None:
+                    self._kill_all()
+                    raise RuntimeError(
+                        f"worker {wid} exited rc={rc} during startup:\n"
+                        f"{self.workers[wid].log_tail()}")
+            try:
+                sock, _ = lst.accept()
+            except socket.timeout:
+                continue
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            # accepted sockets are always blocking (they do not inherit the
+            # listener's timeout); bound the handshake so a stray local
+            # connection can neither hang startup nor crash it
+            sock.settimeout(10.0)
+            chan = Channel(sock)
+            try:
+                kind, d = chan.recv()
+            except ConnectionClosed:
+                chan.close()
+                continue
+            if kind != protocol.HELLO or d.get("token") != token or \
+                    d.get("worker") not in pending:
+                chan.close()
+                continue
+            sock.settimeout(None)
+            wh = self.workers[d["worker"]]
+            wh.chan, wh.alive = chan, True
+            wh.last_hb = _time.monotonic()
+            # byte progress counts as liveness: heartbeats queue behind any
+            # large in-flight frame on the same stream
+            chan.on_traffic = (lambda w=wh: setattr(
+                w, "last_hb", _time.monotonic()))
+            pending.discard(wh.wid)
+        for wh in self.workers.values():
+            threading.Thread(target=self._reader, args=(wh,),
+                             daemon=True).start()
+        threading.Thread(target=self._monitor, daemon=True).start()
+        self._started = True
+        return self
+
+    def __enter__(self) -> "ProcessExecutor":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.shutdown()
+
+    def _kill_all(self):
+        for wh in self.workers.values():
+            if wh.proc.poll() is None:
+                wh.proc.kill()
+
+    def shutdown(self, grace: float = 2.0):
+        """Stop every worker (SHUTDOWN frame, then SIGKILL after ``grace``)."""
+        self._closed = True
+        for wh in self.workers.values():
+            if wh.alive and wh.chan is not None:
+                try:
+                    wh.chan.send(protocol.SHUTDOWN)
+                except ConnectionClosed:
+                    pass
+            wh.alive = False
+        deadline = _time.monotonic() + grace
+        for wh in self.workers.values():
+            while wh.proc.poll() is None and _time.monotonic() < deadline:
+                _time.sleep(0.02)
+            if wh.proc.poll() is None:
+                wh.proc.kill()
+                wh.proc.wait()
+            if wh.chan is not None:
+                wh.chan.close()
+        if self._listener is not None:
+            self._listener.close()
+        if self._logdir is not None:
+            shutil.rmtree(self._logdir, ignore_errors=True)
+            self._logdir = None
+
+    def kill_worker(self, wid: str, sig: int = signal.SIGKILL):
+        """Test/chaos hook: hard-kill one worker (true process isolation)."""
+        self.workers[wid].proc.send_signal(sig)
+
+    # ------------------------------------------------------------------ #
+    # inventory
+    # ------------------------------------------------------------------ #
+    def devices(self) -> tuple:
+        """All ProcDevice handles, worker-major — feed to ResourceManager."""
+        self.start()
+        return tuple(d for wh in self.workers.values() for d in wh.devices)
+
+    def resource_manager(self) -> ResourceManager:
+        return ResourceManager(self.devices())
+
+    # ------------------------------------------------------------------ #
+    # Executor interface (now comes from QueueEventExecutor)
+    # ------------------------------------------------------------------ #
+    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
+        ev = super().poll(timeout)
+        if ev is not None and isinstance(ev.result, _RawResult):
+            try:
+                ev.result = serialize.loads(ev.result.data)
+            except Exception as e:  # noqa: BLE001 — undeserializable result
+                ev.kind, ev.result = "fail", None
+                ev.error = f"{type(e).__name__}: {e}"
+        return ev
+
+    def launch(self, task: Task, duration_hint: Optional[float] = None):
+        self.start()
+        parts: dict[str, dict] = {}
+        for rank, dev in enumerate(task.devices):
+            p = parts.setdefault(dev.worker,
+                                 {"local_devices": [], "global_ranks": []})
+            p["local_devices"].append(dev.index)
+            p["global_ranks"].append(rank)
+        part_workers = list(parts)
+        tracker = _Tracker(task, part_workers, next(self._attempts))
+        with self._lock:
+            self._running[task.uid] = tracker
+        if task.desc.mesh_shape and tracker.n_parts > 1:
+            # a worker-local sub-mesh cannot honour a task-wide topology;
+            # fail loudly instead of silently auto-factoring each part
+            self._fail_all_parts(
+                tracker, f"task {task.desc.name!r}: mesh_shape="
+                f"{task.desc.mesh_shape} cannot be honoured when ranks span "
+                f"{tracker.n_parts} workers; omit mesh_shape or pack the "
+                f"task into one worker")
+            return
+        dead = [w for w in part_workers if not self.workers[w].alive]
+        if dead:
+            self._fail_all_parts(tracker,
+                                 f"worker {dead[0]} lost before launch")
+            return
+        try:
+            payload = serialize.dumps(
+                (task.desc.fn, task.desc.args, task.desc.kwargs))
+        except Exception as e:  # noqa: BLE001 — unserializable payload
+            self._fail_all_parts(tracker, f"{type(e).__name__}: {e}")
+            return
+        for idx, wid in enumerate(part_workers):
+            p = parts[wid]
+            try:
+                self.workers[wid].chan.send(
+                    protocol.LAUNCH, uid=task.uid, attempt=tracker.attempt,
+                    name=task.desc.name,
+                    part=idx, n_parts=tracker.n_parts,
+                    local_devices=p["local_devices"],
+                    global_ranks=p["global_ranks"],
+                    world_size=task.desc.ranks, payload=payload,
+                    mesh_axes=task.desc.mesh_axes,
+                    mesh_shape=task.desc.mesh_shape,
+                    build_comm=self.build_comm)
+            except ConnectionClosed:
+                # this part (and the never-launched rest) can't run; parts
+                # already launched on other workers complete the tracker
+                # with their own PART_DONEs
+                for missing in range(idx, tracker.n_parts):
+                    self._part_terminal(
+                        tracker, missing,
+                        error=f"worker {wid} lost at launch")
+                self._worker_lost(wid, "connection lost at launch")
+                return
+
+    def cancel(self, task: Task) -> bool:
+        with self._lock:
+            tracker = self._running.get(task.uid)
+        if tracker is None:
+            return True          # nothing in flight: no event will come
+        for wid in tracker.part_workers:
+            wh = self.workers.get(wid)
+            if wh is not None and wh.alive:
+                try:
+                    wh.chan.send(protocol.CANCEL, uid=task.uid,
+                                 attempt=tracker.attempt)
+                except ConnectionClosed:
+                    pass
+        return False             # cooperative: the completion event still
+        # arrives (possibly as a fail) and the core reclaims devices then
+
+    # ------------------------------------------------------------------ #
+    # worker I/O
+    # ------------------------------------------------------------------ #
+    def _reader(self, wh: _WorkerHandle):
+        while wh.alive:
+            try:
+                kind, d = wh.chan.recv()
+            except ConnectionClosed as e:
+                self._worker_lost(wh.wid, f"connection lost ({e})")
+                return
+            wh.last_hb = _time.monotonic()   # any traffic proves liveness
+            if kind == protocol.PART_DONE:
+                self._part_done(d)
+            elif kind == protocol.COLL:
+                self._coll_contribution(wh, d)
+
+    def _monitor(self):
+        while not self._closed:
+            _time.sleep(self.hb_interval)
+            for wh in list(self.workers.values()):
+                if not wh.alive:
+                    continue
+                rc = wh.proc.poll()
+                if rc is not None:
+                    self._worker_lost(wh.wid, f"process exited rc={rc}")
+                elif _time.monotonic() - wh.last_hb > self.hb_timeout:
+                    wh.proc.kill()   # hung, not just slow: enforce isolation
+                    self._worker_lost(
+                        wh.wid, f"heartbeat timeout (> {self.hb_timeout}s)")
+
+    # ------------------------------------------------------------------ #
+    # completion / failure plumbing
+    # ------------------------------------------------------------------ #
+    def _abort_parts(self, tracker: _Tracker, error: str):
+        """Prompt-unblock the surviving parts of a failing task: cooperative
+        CANCEL plus a hub release so a part blocked in a collective raises
+        now instead of waiting out the collective timeout.  The parts keep
+        their devices until they actually finish (their PART_DONE completes
+        the tracker) — releasing earlier would double-issue busy devices."""
+        for wid in dict.fromkeys(tracker.part_workers):
+            wh = self.workers.get(wid)
+            if wh is not None and wh.alive:
+                try:
+                    wh.chan.send(protocol.CANCEL, uid=tracker.task.uid,
+                                 attempt=tracker.attempt)
+                    wh.chan.send(protocol.COLL_ERROR, uid=tracker.task.uid,
+                                 attempt=tracker.attempt, seq=None,
+                                 error=error)
+                except ConnectionClosed:
+                    pass
+
+    def _part_terminal(self, tracker: _Tracker, part: int,
+                       error: Optional[str] = None, result=None,
+                       comm_s: float = 0.0):
+        """Record one part's fate; the task's single terminal ExecEvent is
+        delivered only when EVERY part is accounted for (result, error, or
+        hosted on a dead worker)."""
+        with self._lock:
+            if tracker.delivered or part not in tracker.remaining:
+                return
+            tracker.remaining.discard(part)
+            tracker.results[part] = result
+            tracker.comm_build_s = max(tracker.comm_build_s, comm_s)
+            first_error = error is not None and tracker.error is None
+            if first_error:
+                tracker.error = error
+            complete = not tracker.remaining
+            if complete:
+                tracker.delivered = True
+                self._running.pop(tracker.task.uid, None)
+                for k in [k for k in self._coll if k[0] == tracker.task.uid]:
+                    del self._coll[k]
+        if first_error and not complete:
+            self._abort_parts(tracker, error)
+        if not complete:
+            return
+        if tracker.error is not None:
+            self._q.put(ExecEvent("fail", task=tracker.task,
+                                  error=tracker.error,
+                                  comm_build_s=tracker.comm_build_s))
+        else:
+            # results stay as bytes until poll(): deserializing a large
+            # result here would stall this reader thread past hb_timeout
+            # and get a healthy worker killed as hung
+            self._q.put(ExecEvent("done", task=tracker.task,
+                                  result=_RawResult(tracker.results[0]),
+                                  comm_build_s=tracker.comm_build_s))
+
+    def _fail_all_parts(self, tracker: _Tracker, error: str):
+        """Abort a launch that never (fully) reached the workers."""
+        for part in range(tracker.n_parts):
+            self._part_terminal(tracker, part, error=error)
+
+    def _part_done(self, d: dict):
+        with self._lock:
+            tracker = self._running.get(d["uid"])
+        if tracker is None or tracker.attempt != d["attempt"]:
+            return       # stale: task already failed/cancelled, or this part
+            # belongs to a previous attempt of a retried task (same uid)
+        self._part_terminal(tracker, d["part"], error=d["error"],
+                            result=d["result"], comm_s=d["comm_build_s"])
+
+    def _coll_contribution(self, sender: _WorkerHandle, d: dict):
+        uid, attempt, seq = d["uid"], d["attempt"], d["seq"]
+        with self._lock:
+            tracker = self._running.get(uid)
+            if tracker is None or tracker.delivered or \
+                    tracker.attempt != attempt:
+                tracker = None
+            else:
+                entry = self._coll.setdefault((uid, attempt, seq), {})
+                entry[d["part"]] = d["payload"]
+                ready = len(entry) == tracker.n_parts
+                if ready:
+                    values = [entry[i] for i in range(tracker.n_parts)]
+                    del self._coll[(uid, attempt, seq)]
+        if tracker is None:      # aborted task or stale attempt: release the
+            try:                 # sender's waiting thread
+                sender.chan.send(protocol.COLL_ERROR, uid=uid,
+                                 attempt=attempt, seq=seq,
+                                 error="task aborted")
+            except ConnectionClosed:
+                pass
+            return
+        if ready:
+            for wid in tracker.part_workers:
+                wh = self.workers.get(wid)
+                if wh is not None and wh.alive:
+                    try:
+                        wh.chan.send(protocol.COLL_RESULT, uid=uid,
+                                     attempt=attempt, seq=seq, values=values)
+                    except ConnectionClosed:
+                        pass
+
+    def _worker_lost(self, wid: str, reason: str):
+        with self._lock:
+            wh = self.workers[wid]
+            if not wh.alive:
+                return
+            wh.alive = False
+            victims = [t for t in self._running.values()
+                       if wid in t.part_workers and not t.delivered]
+        if wh.chan is not None:
+            wh.chan.close()
+        if wh.proc.poll() is None:
+            wh.proc.kill()       # half-dead worker: finish the job
+        # one pool-shrink event naming the exact dead inventory, then the
+        # dead worker's parts are marked terminal — each victim task's fail
+        # event goes out once its surviving parts also finish (they hold
+        # their devices until then), driving device exclusion + retry on
+        # the surviving workers
+        self._q.put(ExecEvent("device_failure", n_devices=wh.n_devices,
+                              devices=wh.devices))
+        for tracker in victims:
+            for part, owner in enumerate(tracker.part_workers):
+                if owner == wid:
+                    self._part_terminal(tracker, part,
+                                        error=f"worker {wid} lost: {reason}")

@@ -1,0 +1,108 @@
+"""Length-prefixed frame protocol between the pilot (parent) and its worker
+processes.
+
+A frame is ``>I`` big-endian byte length followed by a stdlib-pickled
+``(kind, data)`` tuple where ``data`` is a plain dict of control fields.
+User payloads (functions, results) travel inside frames as opaque ``bytes``
+produced by ``serialize.dumps`` — the framing layer never unpickles them.
+
+Message kinds
+=============
+Every task-scoped frame carries (uid, attempt): the scheduler reuses a
+task's uid across retries, and the attempt id keeps stale frames from a
+failed attempt out of its successor.
+
+worker -> parent:
+  HELLO      {worker, pid, n_devices, platform}        registration
+  HEARTBEAT  {worker, t}                               liveness
+  PART_DONE  {uid, attempt, part, result: bytes|None, error: str|None,
+              comm_build_s}                            one part finished
+  COLL       {uid, attempt, seq, part, payload: bytes} collective contribution
+
+parent -> worker:
+  LAUNCH     {uid, attempt, name, part, n_parts, local_devices: [int],
+              global_ranks: [int], world_size, payload: bytes,
+              mesh_axes, mesh_shape, build_comm}       run one task part
+  COLL_RESULT {uid, attempt, seq, values: [bytes]}     gathered contributions
+  COLL_ERROR {uid, attempt, seq|None, error}           participant died
+  CANCEL     {uid, attempt}                            cooperative abort
+  SHUTDOWN   {}                                        clean exit
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+import threading
+
+HELLO = "hello"
+HEARTBEAT = "heartbeat"
+PART_DONE = "part_done"
+COLL = "coll"
+LAUNCH = "launch"
+COLL_RESULT = "coll_result"
+COLL_ERROR = "coll_error"
+CANCEL = "cancel"
+SHUTDOWN = "shutdown"
+
+_LEN = struct.Struct(">I")
+MAX_FRAME = 1 << 31   # 2 GiB sanity cap
+
+
+class ConnectionClosed(Exception):
+    """Peer went away (EOF or reset) — the liveness signal for SIGKILL."""
+
+
+class Channel:
+    """One framed, thread-safe duplex connection.
+
+    Sends may come from several threads (scheduler launch, hub replies,
+    heartbeat) and are serialized by a lock; receives are single-threaded
+    (each side owns one reader loop).  ``on_traffic`` (if set) fires per
+    received chunk — heartbeats queue BEHIND a large in-flight frame on the
+    same TCP stream, so byte progress itself must count as liveness."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self._send_lock = threading.Lock()
+        self.on_traffic = None
+
+    def send(self, kind: str, **data):
+        frame = pickle.dumps((kind, data), protocol=pickle.HIGHEST_PROTOCOL)
+        with self._send_lock:
+            try:
+                self.sock.sendall(_LEN.pack(len(frame)) + frame)
+            except OSError as e:
+                raise ConnectionClosed(str(e)) from e
+
+    def _recv_exact(self, n: int) -> bytes:
+        chunks = []
+        while n:
+            try:
+                chunk = self.sock.recv(min(n, 1 << 20))
+            except OSError as e:
+                raise ConnectionClosed(str(e)) from e
+            if not chunk:
+                raise ConnectionClosed("EOF")
+            if self.on_traffic is not None:
+                self.on_traffic()
+            chunks.append(chunk)
+            n -= len(chunk)
+        return b"".join(chunks)
+
+    def recv(self):
+        """Blocking read of the next ``(kind, data)`` frame."""
+        (n,) = _LEN.unpack(self._recv_exact(_LEN.size))
+        if n > MAX_FRAME:
+            raise ConnectionClosed(f"oversized frame ({n} bytes)")
+        return pickle.loads(self._recv_exact(n))
+
+    def close(self):
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass

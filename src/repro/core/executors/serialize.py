@@ -1,0 +1,60 @@
+"""Payload serialization for cross-process task shipping.
+
+Two layers are deliberately kept apart:
+
+* *protocol framing* (``protocol.py``) pickles only plain control dicts
+  (strings, ints, bytes) with the stdlib pickler — version-stable and cheap.
+* *payload serialization* (this module) carries the user's ``fn``/args/
+  results, which may be closures or lambdas.  cloudpickle handles those by
+  value; when it is absent we fall back to stdlib pickle, which restricts
+  payloads to importable module-level functions (the error message says so).
+"""
+from __future__ import annotations
+
+import pickle
+
+try:
+    import cloudpickle as _cp
+    HAVE_CLOUDPICKLE = True
+except ImportError:          # pragma: no cover - depends on environment
+    _cp = None
+    HAVE_CLOUDPICKLE = False
+
+
+def _reject_main_refs(obj, depth: int = 2):
+    """Stdlib pickle serializes a __main__-defined function BY REFERENCE,
+    which dumps fine here but explodes with an opaque AttributeError inside
+    the worker (whose __main__ is the worker module).  Catch the common
+    shapes — the payload tuple's functions/objects — at dump time with an
+    actionable error instead."""
+    mod = getattr(obj, "__module__", None) or \
+        getattr(type(obj), "__module__", None)
+    if mod == "__main__":
+        raise TypeError(
+            f"task payload {obj!r} is defined in __main__ and cannot be "
+            f"shipped to a worker process by stdlib pickle; install "
+            f"cloudpickle or move it to an importable module")
+    if depth and isinstance(obj, (tuple, list)):
+        for item in obj:
+            _reject_main_refs(item, depth - 1)
+    elif depth and isinstance(obj, dict):
+        for item in obj.values():
+            _reject_main_refs(item, depth - 1)
+
+
+def dumps(obj) -> bytes:
+    if HAVE_CLOUDPICKLE:
+        return _cp.dumps(obj)
+    _reject_main_refs(obj)
+    try:
+        return pickle.dumps(obj)
+    except Exception as e:
+        raise TypeError(
+            f"cannot serialize task payload without cloudpickle "
+            f"({type(obj).__name__}: {e}); install cloudpickle or use "
+            f"importable module-level functions") from e
+
+
+def loads(data: bytes):
+    # cloudpickle output is plain pickle on the wire; stdlib loads both
+    return pickle.loads(data)

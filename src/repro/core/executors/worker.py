@@ -1,0 +1,302 @@
+"""Worker-process entry point for :class:`ProcessExecutor`.
+
+One worker == one "node" of the paper's pilot: a fresh interpreter whose
+XLA_FLAGS were set by the parent (``--xla_force_host_platform_device_count=K``)
+so it owns K host devices.  The worker
+
+* dials back to the parent, registers its device inventory (HELLO),
+* sends HEARTBEAT frames so the scheduler gets real liveness detection,
+* runs each LAUNCH frame's task *part* in its own thread: builds the local
+  sub-mesh communicator, wraps it in a :class:`ProcTaskComm` (which adds
+  cross-process collectives via the parent's hub), calls the payload, and
+  ships the serialized result back (PART_DONE).
+
+Run as ``python -m repro.core.executors.worker --addr HOST:PORT ...``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import threading
+import time
+from typing import Optional
+
+from repro.core.executors import protocol, serialize
+from repro.core.executors.protocol import Channel, ConnectionClosed
+from repro.core.executors.thread import StubComm
+
+
+class CollectiveError(RuntimeError):
+    """A collective could not complete (a participant's worker died)."""
+
+
+class _Hub:
+    """Client side of the parent-coordinated collectives: one outstanding
+    request per (uid, attempt, seq), answered by COLL_RESULT or COLL_ERROR.
+    ``attempt`` keeps a retried task (same uid) from ever being confused
+    with frames or abort markers of its failed predecessor."""
+
+    def __init__(self, chan: Channel):
+        self.chan = chan
+        self._lock = threading.Lock()
+        self._waiting: dict = {}   # (uid, attempt, seq) -> [event, values]
+        self._dead: dict = {}      # (uid, attempt) -> error (task aborted)
+
+    def call(self, uid: int, attempt: int, seq: int, part: int,
+             payload: bytes, timeout: float) -> list:
+        with self._lock:
+            if (uid, attempt) in self._dead:
+                raise CollectiveError(self._dead[(uid, attempt)])
+            slot = [threading.Event(), None]
+            self._waiting[(uid, attempt, seq)] = slot
+        self.chan.send(protocol.COLL, uid=uid, attempt=attempt, seq=seq,
+                       part=part, payload=payload)
+        if not slot[0].wait(timeout):
+            with self._lock:
+                self._waiting.pop((uid, attempt, seq), None)
+            raise CollectiveError(
+                f"collective uid={uid} seq={seq} timed out after {timeout}s")
+        if isinstance(slot[1], Exception):
+            raise slot[1]
+        return slot[1]
+
+    def deliver(self, uid: int, attempt: int, seq: int, values: list):
+        with self._lock:
+            slot = self._waiting.pop((uid, attempt, seq), None)
+        if slot:
+            slot[1] = values
+            slot[0].set()
+
+    def fail(self, uid: int, attempt: int, seq: Optional[int], error: str):
+        with self._lock:
+            self._dead[(uid, attempt)] = error
+            keys = [k for k in self._waiting
+                    if k[:2] == (uid, attempt) and (seq is None or k[2] == seq)]
+            for k in keys:
+                slot = self._waiting.pop(k)
+                slot[1] = CollectiveError(error)
+                slot[0].set()
+
+    def forget(self, uid: int, attempt: int):
+        """Drop the abort marker once the attempt's part thread has exited —
+        a dead attempt never comes back, and without this the marker dict
+        grows by one entry per cancelled attempt for the worker's life."""
+        with self._lock:
+            self._dead.pop((uid, attempt), None)
+
+
+class ProcTaskComm:
+    """The communicator a payload receives under :class:`ProcessExecutor`.
+
+    Mirrors the thread-mode ``Communicator`` surface (``mesh``, ``devices``,
+    ``build_seconds``) for the ranks local to THIS worker, and adds the
+    cross-process view: ``size`` is the task's total rank count (the paper's
+    heterogeneous communicator spanning nodes), ``local_size`` the ranks this
+    process owns, and ``allgather``/``bcast``/``barrier`` coordinate all
+    parts through the pilot's hub.  Payloads written for ``ThreadExecutor``
+    keep working unchanged as long as the task fits one worker (then
+    ``size == local_size`` and ``mesh`` covers every rank)."""
+
+    def __init__(self, uid: int, world_size: int, global_ranks: tuple,
+                 part: int, n_parts: int, local_comm, hub: _Hub,
+                 attempt: int = 0, coll_timeout: float = 120.0,
+                 cancelled: Optional[threading.Event] = None):
+        self.uid = uid
+        self.attempt = attempt
+        self.world_size = world_size
+        self.global_ranks = tuple(global_ranks)
+        self.part = part
+        self.n_parts = n_parts
+        self.local_comm = local_comm
+        self.cancelled = cancelled or threading.Event()
+        self._hub = hub
+        self._seq = 0
+        self._coll_timeout = coll_timeout
+
+    # --- Communicator-compatible surface (local ranks) -------------------
+    @property
+    def mesh(self):
+        return self.local_comm.mesh
+
+    @property
+    def devices(self) -> tuple:
+        return tuple(self.local_comm.devices)
+
+    @property
+    def build_seconds(self) -> float:
+        return self.local_comm.build_seconds
+
+    @property
+    def size(self) -> int:
+        """Total ranks of the task across all workers."""
+        return self.world_size
+
+    @property
+    def local_size(self) -> int:
+        return len(self.global_ranks)
+
+    @property
+    def rank(self) -> int:
+        """First global rank owned by this part."""
+        return self.global_ranks[0]
+
+    def sub(self, axis: str):
+        return self.local_comm.sub(axis)
+
+    # --- cross-process collectives (per-part granularity) -----------------
+    def allgather(self, obj) -> list:
+        """Gather one object per *part* (worker share), same list everywhere,
+        ordered by part index.  Parts must call collectives in the same
+        order — the usual SPMD contract."""
+        seq, self._seq = self._seq, self._seq + 1
+        values = self._hub.call(self.uid, self.attempt, seq, self.part,
+                                serialize.dumps(obj), self._coll_timeout)
+        return [serialize.loads(v) for v in values]
+
+    def barrier(self):
+        self.allgather(None)
+
+    def bcast(self, obj, root: int = 0):
+        """Broadcast ``obj`` from part ``root`` to every part."""
+        return self.allgather(obj if self.part == root else None)[root]
+
+
+class Worker:
+    def __init__(self, addr: tuple, worker_id: str, n_devices: int,
+                 heartbeat: float, token: str):
+        self.worker_id = worker_id
+        self.n_devices = n_devices
+        self.heartbeat = heartbeat
+        self.token = token
+        sock = socket.create_connection(addr, timeout=30)
+        # the connect timeout must NOT linger on the established channel: an
+        # idle worker (no launches for 30s) would hit a recv timeout and die
+        sock.settimeout(None)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.chan = Channel(sock)
+        self.hub = _Hub(self.chan)
+        self._tasks: dict = {}   # (uid, attempt) -> cancel Event, while the
+        # part runs here; doubles as the is-this-attempt-alive check
+        self._jax_devices = None
+
+    # --- device inventory -------------------------------------------------
+    def _local_devices(self, indices, build_comm: bool):
+        if not build_comm:
+            return tuple(f"{self.worker_id}:{i}" for i in indices)
+        if self._jax_devices is None:
+            import jax
+            self._jax_devices = jax.devices()
+            if len(self._jax_devices) < self.n_devices:
+                raise RuntimeError(
+                    f"worker {self.worker_id}: XLA exposes "
+                    f"{len(self._jax_devices)} devices, parent expected "
+                    f"{self.n_devices}")
+        return tuple(self._jax_devices[i] for i in indices)
+
+    # --- task parts -------------------------------------------------------
+    def _run_part(self, d: dict, cancelled: threading.Event):
+        uid, attempt, part = d["uid"], d["attempt"], d["part"]
+        comm_s = 0.0
+        try:
+            devs = self._local_devices(d["local_devices"], d["build_comm"])
+            if d["build_comm"]:
+                from repro.core.communicator import build_communicator
+                shape = d["mesh_shape"] if d["n_parts"] == 1 else None
+                local = build_communicator(devs, d["mesh_axes"], shape,
+                                           uid=f"task{uid}.p{part}")
+                comm_s = local.build_seconds
+            else:
+                local = StubComm(devices=devs)
+            comm = ProcTaskComm(uid=uid, world_size=d["world_size"],
+                                global_ranks=d["global_ranks"], part=part,
+                                n_parts=d["n_parts"], local_comm=local,
+                                hub=self.hub, attempt=attempt,
+                                cancelled=cancelled)
+            fn, args, kwargs = serialize.loads(d["payload"])
+            res = fn(comm, *args, **kwargs)
+            self.chan.send(protocol.PART_DONE, uid=uid, attempt=attempt,
+                           part=part, result=serialize.dumps(res),
+                           error=None, comm_build_s=comm_s)
+        except ConnectionClosed:
+            pass                     # parent is gone; nothing to report to
+        except Exception as e:  # noqa: BLE001 — report any payload error
+            try:
+                self.chan.send(protocol.PART_DONE, uid=uid, attempt=attempt,
+                               part=part, result=None,
+                               error=f"{type(e).__name__}: {e}",
+                               comm_build_s=comm_s)
+            except ConnectionClosed:
+                pass
+        finally:
+            self._tasks.pop((uid, attempt), None)
+            self.hub.forget(uid, attempt)
+
+    def _log(self, msg: str):
+        print(f"[worker {self.worker_id} pid={os.getpid()} "
+              f"t={time.time():.3f}] {msg}", file=sys.stderr, flush=True)
+
+    # --- liveness ---------------------------------------------------------
+    def _heartbeat_loop(self):
+        while True:
+            time.sleep(self.heartbeat)
+            try:
+                self.chan.send(protocol.HEARTBEAT, worker=self.worker_id,
+                               t=time.time())
+            except ConnectionClosed as e:
+                self._log(f"exiting: heartbeat send failed ({e})")
+                os._exit(1)          # parent died: no reason to live on
+
+    # --- main loop --------------------------------------------------------
+    def run(self):
+        self.chan.send(protocol.HELLO, worker=self.worker_id, pid=os.getpid(),
+                       n_devices=self.n_devices, token=self.token,
+                       platform=sys.platform)
+        threading.Thread(target=self._heartbeat_loop, daemon=True).start()
+        while True:
+            try:
+                kind, d = self.chan.recv()
+            except ConnectionClosed as e:
+                self._log(f"exiting: parent channel closed ({e})")
+                os._exit(1)
+            if kind == protocol.LAUNCH:
+                # register the cancel flag BEFORE the part thread exists so
+                # a CANCEL racing the thread start is never lost (frames on
+                # one channel are ordered: LAUNCH always precedes CANCEL)
+                cancelled = threading.Event()
+                self._tasks[(d["uid"], d["attempt"])] = cancelled
+                threading.Thread(target=self._run_part, args=(d, cancelled),
+                                 daemon=True).start()
+            elif kind == protocol.COLL_RESULT:
+                self.hub.deliver(d["uid"], d["attempt"], d["seq"],
+                                 d["values"])
+            elif kind == protocol.COLL_ERROR:
+                self.hub.fail(d["uid"], d["attempt"], d.get("seq"),
+                              d["error"])
+            elif kind == protocol.CANCEL:
+                cancelled = self._tasks.get((d["uid"], d["attempt"]))
+                if cancelled is not None:    # part still running here
+                    cancelled.set()
+                    self.hub.fail(d["uid"], d["attempt"], None,
+                                  "task cancelled")
+            elif kind == protocol.SHUTDOWN:
+                self._log("exiting: shutdown requested")
+                os._exit(0)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--addr", required=True, help="host:port of the pilot")
+    p.add_argument("--worker", required=True)
+    p.add_argument("--n-devices", type=int, required=True)
+    p.add_argument("--heartbeat", type=float, default=0.5)
+    p.add_argument("--token", default="")
+    a = p.parse_args(argv)
+    host, port = a.addr.rsplit(":", 1)
+    Worker((host, int(port)), a.worker, a.n_devices, a.heartbeat,
+           a.token).run()
+
+
+if __name__ == "__main__":
+    main()

@@ -50,6 +50,12 @@ class ResourceManager:
         with self._lock:
             return set(self._failed)
 
+    def __contains__(self, device) -> bool:
+        """True while the device is part of this inventory (free OR busy);
+        failed devices have left the inventory."""
+        with self._lock:
+            return device in self._all
+
     def allocate(self, n: int, exclude: Sequence = ()) -> tuple:
         """Allocate ``n`` devices, preferring ones not in ``exclude`` (used
         by retry-with-device-exclusion: a task avoids devices its previous
@@ -69,9 +75,16 @@ class ResourceManager:
 
     def release(self, devices: Sequence):
         with self._lock:
+            # snapshot sets once: membership scans on the raw lists would be
+            # O(pool) per device, quadratic at paper-scale (2688) pools
+            owned, free = set(self._all), set(self._free)
             for d in devices:
-                if d not in self._failed and d in self._all:
+                # the membership check on _free guards against double
+                # release: the same handle appended twice would satisfy two
+                # concurrent allocations with one physical device
+                if d not in self._failed and d in owned and d not in free:
                     self._free.append(d)
+                    free.add(d)
 
     def fail_devices(self, devices: Sequence):
         """Failure injection: devices die; running tasks on them must retry."""

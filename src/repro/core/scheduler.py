@@ -1,7 +1,10 @@
 """Unified event-driven scheduler core — the paper's contribution, written
 ONCE against an abstract ``Executor`` so the *identical* scheduling code runs
-(a) live on real JAX devices (``ThreadExecutor``) and (b) on a virtual clock
-at 84–2688 ranks (``VirtualClockExecutor``, the paper's ORNL-Summit scales).
+(a) live on real JAX devices (``ThreadExecutor``), (b) on a virtual clock
+at 84–2688 ranks (``VirtualClockExecutor``, the paper's ORNL-Summit scales),
+and (c) across worker *processes* — one fresh interpreter per node with its
+own host devices, heartbeat liveness, and cross-process per-task
+communicators (``ProcessExecutor``, see ``repro.core.executors.proc``).
 
 Two policies, mirroring the paper's §4.3 comparison:
 
@@ -26,19 +29,26 @@ consumed uniformly by the benchmarks and ``SimReport``.
 """
 from __future__ import annotations
 
-import abc
 import dataclasses
-import heapq
-import itertools
-import math
-import queue as _queue
 import statistics
 import threading
 import time as _time
-from typing import Any, Callable, Optional, Sequence
+from typing import Optional, Sequence
 
+from repro.core.executors import (
+    ExecEvent, Executor, ProcDevice, ProcessExecutor, SimOptions, StubComm,
+    ThreadExecutor, VirtualClockExecutor, default_overhead_model,
+)
 from repro.core.pilot import InsufficientResources, ResourceManager
 from repro.core.task import Task, TaskDescription, TaskState
+
+__all__ = [  # executor names are re-exported for historical import paths
+    "BATCH", "HETEROGENEOUS", "ExecEvent", "Executor", "LiveScheduler",
+    "ProcDevice", "ProcessExecutor", "SchedulerSession", "SimOptions",
+    "SimReport", "StubComm", "ThreadExecutor", "TraceEvent",
+    "VirtualClockExecutor", "default_overhead_model",
+    "interleave_by_pipeline", "simulate",
+]
 
 HETEROGENEOUS = "heterogeneous"
 BATCH = "batch"
@@ -62,19 +72,6 @@ def interleave_by_pipeline(tasks):
                 out.append(groups[g].pop(0))
     out.sort(key=lambda t: -t.desc.priority)  # stable: RR preserved per prio
     return out
-
-
-# ---------------------------------------------------------------------------
-# calibrated models (defaults measured on this container; see
-# benchmarks/bench_overhead.py which re-measures and can override)
-# ---------------------------------------------------------------------------
-def default_overhead_model(ranks: int) -> float:
-    """Communicator-construction + task-description overhead (seconds).
-    The paper's Table 2 reports 2.3-3.5 s, roughly flat in ranks; our JAX
-    sub-mesh build is milliseconds, so the sim uses the paper-calibrated
-    constants to reproduce Table 2, while bench_overhead.py reports our own
-    measured numbers."""
-    return 2.8 + 0.0012 * ranks
 
 
 # ---------------------------------------------------------------------------
@@ -115,198 +112,6 @@ class SimReport:
         if kind is None:
             return list(self.trace)
         return [e for e in self.trace if e.kind == kind]
-
-
-@dataclasses.dataclass
-class SimOptions:
-    policy: str = HETEROGENEOUS
-    overhead_model: Callable[[int], float] = default_overhead_model
-    noise: float = 0.02                  # lognormal sigma on durations
-    seed: int = 0
-    straggler_prob: float = 0.0          # chance a task runs slow
-    straggler_slowdown: float = 3.0
-    speculative_factor: Optional[float] = None   # e.g. 1.5 -> spec-exec on
-    failure_prob: float = 0.0            # chance a task attempt fails
-    device_failures: Sequence[tuple] = ()  # [(time_s, n_devices), ...]
-
-
-# ---------------------------------------------------------------------------
-# executor interface
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class ExecEvent:
-    """What an executor delivers back to the scheduler core."""
-    kind: str                      # done|fail|tick|device_failure
-    task: Optional[Task] = None
-    result: Any = None
-    error: Optional[str] = None
-    comm_build_s: float = 0.0
-    n_devices: int = 0             # device_failure payload
-
-
-class Executor(abc.ABC):
-    """Runs one task at a time on behalf of the scheduler core.
-
-    The core allocates ``task.devices`` from the policy pools, then calls
-    ``launch``; the executor later delivers exactly one ``done``/``fail``
-    ExecEvent per launch via ``poll`` (unless ``cancel`` returned True).
-    The executor also owns the clock: virtual seconds or wall time.
-    """
-
-    #: True when ``now()`` is wall time.  Scheduler timeouts are liveness
-    #: guards against hangs, so they are enforced only on wall-clock
-    #: executors — a virtual clock drains its event heap deterministically
-    #: and healthy simulations routinely span thousands of virtual seconds.
-    wall_clock: bool = True
-
-    @abc.abstractmethod
-    def now(self) -> float:
-        ...
-
-    @abc.abstractmethod
-    def launch(self, task: Task, duration_hint: Optional[float] = None):
-        """Begin executing ``task`` on ``task.devices``.  ``duration_hint``
-        is set for speculative duplicates (expected runtime on a healthy
-        device); the virtual clock honours it, live executors ignore it."""
-
-    @abc.abstractmethod
-    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
-        """Next event.  ``timeout == 0`` -> non-blocking (None if nothing is
-        ready *right now*; must not advance a virtual clock).  Otherwise a
-        live executor blocks up to ``timeout`` and returns a ``tick`` event
-        on expiry; a virtual executor returns the next event (advancing its
-        clock) or None when no event can ever arrive again."""
-
-    def cancel(self, task: Task) -> bool:
-        """Best-effort abort.  True -> the task is dead *now* and no event
-        will be delivered for it (core reclaims devices immediately).
-        False -> a completion event will still arrive later (live threads
-        cannot be killed; the core ignores the event and reclaims then)."""
-        return False
-
-
-class VirtualClockExecutor(Executor):
-    """Deterministic event-heap executor — the paper's large-scale mode.
-
-    Durations come from ``desc.duration_model(ranks)`` with lognormal noise,
-    straggler and failure injection per ``SimOptions``; communicator-build
-    overhead from ``opts.overhead_model``.  Device failures are injected as
-    timed events the core turns into pool shrinks."""
-
-    wall_clock = False
-
-    def __init__(self, opts: Optional[SimOptions] = None):
-        import random
-        self.opts = opts or SimOptions()
-        self.rng = random.Random(self.opts.seed)
-        self._now = 0.0
-        self._seq = itertools.count()
-        self._heap: list = []
-        self._canceled: set = set()
-        for ft, nf in self.opts.device_failures:
-            heapq.heappush(self._heap,
-                           (ft, next(self._seq),
-                            ExecEvent("device_failure", n_devices=nf)))
-
-    def now(self) -> float:
-        return self._now
-
-    def launch(self, task: Task, duration_hint: Optional[float] = None):
-        opts = self.opts
-        if duration_hint is not None:
-            # speculative duplicate: runs at the hinted (median) rate on a
-            # fresh device — no overhead, no straggler/failure injection
-            oh, dur, fails = 0.0, duration_hint, False
-        else:
-            oh = opts.overhead_model(task.desc.ranks)
-            dur = task.desc.duration_model(task.desc.ranks)
-            dur *= math.exp(self.rng.gauss(0.0, opts.noise))
-            if opts.straggler_prob and self.rng.random() < opts.straggler_prob:
-                dur *= opts.straggler_slowdown
-            fails = bool(opts.failure_prob
-                         and self.rng.random() < opts.failure_prob)
-        ev = ExecEvent("fail" if fails else "done", task=task,
-                       error="injected failure" if fails else None,
-                       comm_build_s=oh)
-        heapq.heappush(self._heap,
-                       (self._now + oh + dur, next(self._seq), ev))
-
-    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
-        if timeout == 0:
-            return None   # never advance the clock on an opportunistic poll
-        while self._heap:
-            t, _, ev = heapq.heappop(self._heap)
-            if ev.task is not None and ev.task.uid in self._canceled:
-                continue
-            self._now = t
-            return ev
-        return None
-
-    def cancel(self, task: Task) -> bool:
-        self._canceled.add(task.uid)
-        return True
-
-
-@dataclasses.dataclass
-class StubComm:
-    """Communicator stand-in when ``ThreadExecutor(build_comm=False)`` — used
-    by tests that exercise scheduling on fake devices without JAX meshes."""
-    devices: tuple
-    mesh: Any = None
-    build_seconds: float = 0.0
-
-    @property
-    def size(self) -> int:
-        return len(self.devices)
-
-
-class ThreadExecutor(Executor):
-    """Live executor: each task runs ``fn(comm, *args, **kwargs)`` in a
-    worker thread on its allocated devices, with a freshly built private
-    Communicator (the paper's per-task MPI_Comm analogue)."""
-
-    def __init__(self, build_comm: bool = True, tick: float = 0.05):
-        self.build_comm = build_comm
-        self.tick = tick
-        self._q: "_queue.Queue[ExecEvent]" = _queue.Queue()
-
-    def now(self) -> float:
-        return _time.perf_counter()
-
-    def launch(self, task: Task, duration_hint: Optional[float] = None):
-        def worker():
-            comm_s = 0.0
-            try:
-                if self.build_comm:
-                    from repro.core.communicator import build_communicator
-                    comm = build_communicator(task.devices,
-                                              task.desc.mesh_axes,
-                                              task.desc.mesh_shape,
-                                              uid=f"task{task.uid}")
-                    comm_s = comm.build_seconds
-                else:
-                    comm = StubComm(devices=tuple(task.devices))
-                res = task.desc.fn(comm, *task.desc.args, **task.desc.kwargs)
-                self._q.put(ExecEvent("done", task=task, result=res,
-                                      comm_build_s=comm_s))
-            except Exception as e:  # noqa: BLE001 — report any payload error
-                self._q.put(ExecEvent("fail", task=task,
-                                      error=f"{type(e).__name__}: {e}",
-                                      comm_build_s=comm_s))
-
-        threading.Thread(target=worker, daemon=True).start()
-
-    def poll(self, timeout: Optional[float]) -> Optional[ExecEvent]:
-        if timeout == 0:
-            try:
-                return self._q.get_nowait()
-            except _queue.Empty:
-                return None
-        try:
-            return self._q.get(timeout=self.tick if timeout is None
-                               else min(timeout, self.tick))
-        except _queue.Empty:
-            return ExecEvent("tick")
 
 
 # ---------------------------------------------------------------------------
@@ -630,10 +435,30 @@ class SchedulerSession:
     def _handle(self, ev: ExecEvent) -> list[Task]:
         now = self.executor.now()
         if ev.kind == "device_failure":
-            pool = max(self._pools.values(), key=lambda p: p.n_free)
-            n = min(ev.n_devices, pool.n_free)
-            if n:
-                pool.fail_devices(pool.allocate(n))
+            if ev.devices:
+                # targeted failure (process executor: a crashed worker's
+                # exact inventory dies, busy or free).  Partition pools are
+                # checked first; in BATCH the rounding leftovers live in the
+                # parent pool.  Busy dead devices stay marked failed, so the
+                # release() in their task's fail event is a no-op.
+                pools = list(self._pools.values()) if self._pools else []
+                if self.rm not in pools:
+                    pools.append(self.rm)
+                n, seen = 0, set()
+                for pool in pools:
+                    hit = [d for d in ev.devices
+                           if d not in seen and d in pool]
+                    if hit:
+                        pool.fail_devices(hit)
+                        seen.update(hit)
+                        n += len(hit)
+            else:
+                # anonymous shrink (virtual-clock injection): lose up to
+                # n_devices arbitrary FREE devices
+                pool = max(self._pools.values(), key=lambda p: p.n_free)
+                n = min(ev.n_devices, pool.n_free)
+                if n:
+                    pool.fail_devices(pool.allocate(n))
             self._tr("device_failure", value=float(n))   # devices LOST, which
             # may be fewer than requested when the pool is busy
             self._dispatch()
@@ -729,20 +554,26 @@ class LiveScheduler:
     devices backfill pending tasks (heterogeneous policy) or stay inside
     their pipeline partition (batch policy).
 
-    Thin facade over ``SchedulerSession`` + ``ThreadExecutor`` — the same
-    dispatch/retry/spec-exec code path as ``simulate``."""
+    Thin facade over ``SchedulerSession`` + a live executor — the same
+    dispatch/retry/spec-exec code path as ``simulate``.  The backend is
+    selectable: the default ``ThreadExecutor`` runs tasks in-process; pass a
+    started :class:`ProcessExecutor` (whose ``resource_manager()`` supplied
+    the device pool) to run the same workload across worker processes."""
 
     def __init__(self, resource_manager: ResourceManager,
                  policy: str = HETEROGENEOUS,
-                 speculative_factor: Optional[float] = None):
+                 speculative_factor: Optional[float] = None,
+                 executor: Optional[Executor] = None):
         self.rm = resource_manager
         self.policy = policy
         self.speculative_factor = speculative_factor
+        self.executor = executor
         self.tasks: list[Task] = []
 
     def run(self, descs: Sequence[TaskDescription],
             timeout: float = 600.0) -> SimReport:
-        sess = SchedulerSession(ThreadExecutor(), self.rm, policy=self.policy,
+        sess = SchedulerSession(self.executor or ThreadExecutor(), self.rm,
+                                policy=self.policy,
                                 speculative_factor=self.speculative_factor)
         rep = sess.run(descs, timeout=timeout)
         self.tasks = rep.tasks

@@ -41,7 +41,15 @@ class Table:
         return jnp.arange(self.capacity) < self.nrows
 
     def to_numpy(self) -> dict:
-        n = int(self.nrows)
+        nrows = np.asarray(self.nrows)
+        if nrows.ndim:
+            # distributed table: nrows is a per-rank vector and the columns
+            # are rank-major (P*capacity,) buffers — int(nrows) would throw
+            # an opaque conversion error.  Delegate to collect_table, which
+            # strips each rank's padding before concatenating.
+            from repro.dataframe.ops_dist import collect_table
+            return collect_table(self)
+        n = int(nrows)
         return {k: np.asarray(v)[:n] for k, v in self.columns.items()}
 
 

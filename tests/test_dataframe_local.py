@@ -94,3 +94,16 @@ def test_concat():
     b = from_numpy({"k": np.asarray([3, 4, 5], np.int32)}, capacity=5)
     out = L.concat(a, b, capacity=8)
     np.testing.assert_array_equal(out.to_numpy()["k"], [1, 2, 3, 4, 5])
+
+
+def test_to_numpy_on_distributed_table_delegates_to_collect():
+    """A distributed Table carries a per-rank nrows VECTOR and rank-major
+    padded columns; to_numpy must strip each rank's padding (collect_table
+    semantics) instead of crashing on int(vector)."""
+    # 2 ranks, capacity 3 each: rank0 holds [1, 2], rank1 holds [5]
+    t = Table(columns={"k": jnp.asarray([1, 2, 0, 5, 0, 0], jnp.int32)},
+              nrows=jnp.asarray([2, 1], jnp.int32))
+    np.testing.assert_array_equal(t.to_numpy()["k"], [1, 2, 5])
+    # the scalar (local) path is unchanged
+    local = from_numpy({"k": np.asarray([7, 8], np.int32)}, capacity=4)
+    np.testing.assert_array_equal(local.to_numpy()["k"], [7, 8])

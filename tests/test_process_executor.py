@@ -1,0 +1,370 @@
+"""ProcessExecutor: the multi-process pilot runtime.
+
+Fast protocol/serialization units and a 2-worker smoke run stay in tier-1;
+everything that spawns several fresh interpreters or exercises failure
+injection is marked ``integration`` (CI runs those in the dedicated
+process-executor job under --xla_force_host_platform_device_count).
+"""
+import signal
+import socket
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ProcDevice, ProcessExecutor, ResourceManager, SchedulerSession,
+    TaskDescription, TaskState,
+)
+from repro.core.executors import serialize
+from repro.core.executors.protocol import Channel, ConnectionClosed
+
+if serialize.HAVE_CLOUDPICKLE:
+    import cloudpickle
+
+    # ship this module's payload functions by value: a worker process has no
+    # way to import the test module
+    cloudpickle.register_pickle_by_value(sys.modules[__name__])
+
+needs_cloudpickle = pytest.mark.skipif(
+    not serialize.HAVE_CLOUDPICKLE,
+    reason="cloudpickle needed to ship test-local payload functions")
+
+
+# ---------------------------------------------------------------------------
+# wire-layer units (no subprocesses)
+# ---------------------------------------------------------------------------
+def test_channel_roundtrip_and_eof():
+    a, b = socket.socketpair()
+    ca, cb = Channel(a), Channel(b)
+    big = b"x" * (3 << 20)
+    # a frame larger than the socket buffer: send from a thread so the
+    # reader drains concurrently (as the real duplex channel does)
+    sender = threading.Thread(target=ca.send, args=("launch",),
+                              kwargs={"uid": 7, "payload": big})
+    sender.start()
+    kind, d = cb.recv()
+    sender.join()
+    assert kind == "launch" and d["uid"] == 7 and d["payload"] == big
+    cb.send("part_done", uid=7, part=0)
+    assert ca.recv()[0] == "part_done"
+    cb.close()
+    with pytest.raises(ConnectionClosed):
+        ca.recv()
+
+
+def test_channel_send_is_thread_safe():
+    a, b = socket.socketpair()
+    ca, cb = Channel(a), Channel(b)
+    n_threads, n_frames = 4, 50
+    payload = b"y" * 10_000
+
+    def sender(tid):
+        for i in range(n_frames):
+            ca.send("coll", tid=tid, i=i, payload=payload)
+
+    threads = [threading.Thread(target=sender, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    got = [cb.recv() for _ in range(n_threads * n_frames)]
+    for t in threads:
+        t.join()
+    # interleaved multi-threaded sends must never corrupt framing
+    assert all(kind == "coll" and d["payload"] == payload for kind, d in got)
+
+
+def test_serialize_roundtrip():
+    fn, args, kwargs = (sorted, ([3, 1, 2],), {"reverse": True})
+    f2, a2, k2 = serialize.loads(serialize.dumps((fn, args, kwargs)))
+    assert f2(*a2, **k2) == [3, 2, 1]
+    if serialize.HAVE_CLOUDPICKLE:
+        add = serialize.loads(serialize.dumps(lambda x: x + 1))
+        assert add(41) == 42
+
+
+def test_serialize_without_cloudpickle_rejects_main_payloads(monkeypatch):
+    """Stdlib pickle dumps a __main__ function BY REFERENCE (succeeds), then
+    explodes opaquely inside the worker whose __main__ differs — must be
+    rejected at dump time with an actionable error instead."""
+    monkeypatch.setattr(serialize, "HAVE_CLOUDPICKLE", False)
+
+    def fake_main_fn():
+        return 1
+
+    fake_main_fn.__module__ = "__main__"
+    with pytest.raises(TypeError, match="cloudpickle"):
+        serialize.dumps((fake_main_fn, (), {}))
+    # importable module-level callables still pass through
+    assert serialize.loads(serialize.dumps((sorted, ([2, 1],), {})))
+
+
+def test_proc_device_is_stable_rm_handle():
+    devs = [ProcDevice("w0", 0), ProcDevice("w0", 1), ProcDevice("w1", 0)]
+    rm = ResourceManager(devs)
+    got = rm.allocate(2)
+    assert got == (devs[0], devs[1])
+    rm.release(got)
+    rm.fail_devices([devs[2]])
+    assert rm.total == 2 and devs[2] not in rm
+
+
+# ---------------------------------------------------------------------------
+# payloads shipped to workers (module-level, pickled by value)
+# ---------------------------------------------------------------------------
+def _echo(comm, tag="t"):
+    return (tag, comm.size, comm.local_size, tuple(map(str, comm.devices)))
+
+
+def _span_gather(comm):
+    parts = comm.allgather(comm.global_ranks)
+    root = comm.bcast(("from-part0", comm.rank))
+    comm.barrier()
+    return {"parts": parts, "root": root, "world": comm.size}
+
+
+def _sleepy(comm, dur=0.8):
+    time.sleep(dur)
+    return str(comm.devices[0])
+
+
+def _flaky_on_w0(comm):
+    dev = str(comm.devices[0])
+    if dev.startswith("w0"):
+        raise RuntimeError(f"bad device {dev}")
+    return dev
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (subprocess-spawning)
+# ---------------------------------------------------------------------------
+@needs_cloudpickle
+def test_process_executor_smoke_spanning_task():
+    """2 workers x 2 devices: single-worker tasks plus one 4-rank task whose
+    ranks span both worker processes and allgather/bcast through the hub."""
+    with ProcessExecutor(n_workers=2, devices_per_worker=2,
+                         build_comm=False, heartbeat_interval=0.2) as ex:
+        assert ex.devices() == tuple(
+            ProcDevice(f"w{w}", i) for w in range(2) for i in range(2))
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        # b first so its 2 ranks land on w0's 2 devices (allocation is
+        # first-free in submission order); a then takes a w1 device
+        rep = sess.run(
+            [TaskDescription(name="b", ranks=2, fn=_echo, kwargs={"tag": "b"},
+                             tags={"pipeline": "p"}),
+             TaskDescription(name="a", ranks=1, fn=_echo, kwargs={"tag": "a"},
+                             tags={"pipeline": "p"}),
+             TaskDescription(name="span", ranks=4, fn=_span_gather,
+                             tags={"pipeline": "p"})],
+            timeout=120)
+        by = {t.desc.name: t for t in rep.tasks}
+        assert all(t.state == TaskState.DONE for t in rep.tasks)
+        assert by["a"].result[1:3] == (1, 1)
+        assert by["b"].result[1:3] == (2, 2)   # one worker owns both ranks
+        span = by["span"].result
+        assert span["world"] == 4
+        assert len(span["parts"]) == 2              # one part per worker
+        assert sorted(r for p in span["parts"] for r in p) == [0, 1, 2, 3]
+        assert span["root"][0] == "from-part0"
+        # same TraceEvent schema as every other executor
+        assert [e.kind for e in rep.trace if e.task == "span"] == \
+            ["submit", "dispatch", "done"]
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_worker_sigkill_fails_devices_and_retries_on_survivors():
+    """SIGKILL one worker mid-run: its inventory dies (device_failure trace
+    naming the lost count), in-flight tasks fail and retry with device
+    exclusion on the surviving worker — true process isolation, not an
+    injected failure."""
+    with ProcessExecutor(n_workers=2, devices_per_worker=2,
+                         build_comm=False, heartbeat_interval=0.2) as ex:
+        rm = ex.resource_manager()
+        sess = SchedulerSession(ex, rm, tick=0.02)
+        descs = [TaskDescription(name=f"t{i}", ranks=1, fn=_sleepy,
+                                 max_retries=2, tags={"pipeline": "p"})
+                 for i in range(6)]
+        sess.submit(descs)
+        time.sleep(0.3)               # 4 tasks are now running, 2 pending
+        ex.kill_worker("w0", signal.SIGKILL)
+        rep = sess.drain(timeout=120).close()
+        assert all(t.state == TaskState.DONE for t in rep.tasks)
+        fails = rep.events("device_failure")
+        assert len(fails) == 1 and fails[0].value == 2.0
+        assert len(rep.events("retry")) >= 1
+        assert rm.total == 2          # pool shrank to the surviving worker
+        retried = [t for t in rep.tasks if t.retries]
+        assert retried and all(
+            d.worker == "w0" for t in retried for d in t.excluded_devices)
+        assert all(t.result.startswith("w1") for t in retried)
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_hung_worker_detected_by_heartbeat_timeout():
+    """SIGSTOP (hang, not crash): no EOF arrives, so only the heartbeat
+    monitor can notice; it must kill the worker and fail its devices."""
+    with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                         build_comm=False, heartbeat_interval=0.15,
+                         heartbeat_timeout=0.8) as ex:
+        rm = ex.resource_manager()
+        sess = SchedulerSession(ex, rm, tick=0.02)
+        sess.submit([TaskDescription(name=f"t{i}", ranks=1, fn=_sleepy,
+                                     args=(0.5,), max_retries=2,
+                                     tags={"pipeline": "p"})
+                     for i in range(3)])
+        time.sleep(0.2)
+        ex.workers["w0"].proc.send_signal(signal.SIGSTOP)
+        rep = sess.drain(timeout=120).close()
+        assert all(t.state == TaskState.DONE for t in rep.tasks)
+        assert len(rep.events("device_failure")) == 1
+        assert rm.total == 1
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_retry_with_exclusion_on_payload_error_via_livescheduler():
+    """A payload that only fails on w0 devices: the retry must prefer the
+    other worker's devices (same exclusion logic as the thread executor).
+    Driven through LiveScheduler to cover the selectable-backend wiring."""
+    from repro.core import LiveScheduler
+    with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                         build_comm=False, heartbeat_interval=0.2) as ex:
+        sched = LiveScheduler(ex.resource_manager(), executor=ex)
+        rep = sched.run([TaskDescription(name="f", ranks=1, fn=_flaky_on_w0,
+                                         max_retries=2,
+                                         tags={"pipeline": "p"})],
+                        timeout=120)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE
+        assert task.result.startswith("w1")
+        assert ProcDevice("w0", 0) in task.excluded_devices
+        assert rep.n_retries == 1
+
+
+def _fail_part0_attempt0(comm):
+    if comm.part == 0 and comm.attempt == 0:
+        raise RuntimeError("first attempt dies")
+    if comm.part == 1:
+        time.sleep(0.5)      # outlive the retry's launch: the stale PART_DONE
+        # of attempt 0 arrives while attempt 1 is in flight
+    return f"ok-attempt{comm.attempt}"
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_stale_part_of_failed_attempt_not_credited_to_retry():
+    """The scheduler reuses task.uid across retries.  A slow sibling part of
+    a FAILED attempt must not be credited to the retry of the same task —
+    frames are matched on (uid, attempt), so the retry completes with its
+    own results only."""
+    with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                         build_comm=False, heartbeat_interval=0.2) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="t", ranks=2,
+                                        fn=_fail_part0_attempt0,
+                                        max_retries=2,
+                                        tags={"pipeline": "p"})], timeout=120)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE
+        assert rep.n_retries == 1
+        assert task.result == "ok-attempt1"   # never attempt 0's payload
+
+
+def _span_part0_dies(comm):
+    if comm.part == 0:
+        raise RuntimeError("part0 dies")
+    time.sleep(0.8)
+    return "survivor"
+
+
+def _quick(comm):
+    return "quick"
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_partial_failure_holds_devices_until_sibling_part_finishes():
+    """One part of a spanning task fails fast while the sibling still
+    computes: the task's devices must NOT be released (and re-issued to a
+    pending task) until the surviving part actually finishes — otherwise
+    two payloads run on one worker device."""
+    with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                         build_comm=False, heartbeat_interval=0.2) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run(
+            [TaskDescription(name="span", ranks=2, fn=_span_part0_dies,
+                             max_retries=0, tags={"pipeline": "p"}),
+             TaskDescription(name="waiter", ranks=1, fn=_quick,
+                             tags={"pipeline": "p"})],
+            timeout=120)
+        by = {t.desc.name: t for t in rep.tasks}
+        assert by["span"].state == TaskState.FAILED
+        assert by["waiter"].state == TaskState.DONE
+        t_disp = {e.task: e.t for e in rep.trace if e.kind == "dispatch"}
+        t_fail = next(e.t for e in rep.trace if e.kind == "fail")
+        # the fail surfaces only after the 0.8s surviving part drained ...
+        assert t_fail - t_disp["span"] >= 0.7
+        # ... and only then is the freed device re-issued
+        assert t_disp["waiter"] >= t_fail - 0.05
+
+
+def _psum_local(comm):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    n = comm.local_size
+    f = jax.jit(jax.shard_map(lambda x: jax.lax.psum(x, "df"),
+                              mesh=comm.mesh, in_specs=P("df"),
+                              out_specs=P()))
+    return float(f(jnp.ones((n, 2))).sum())
+
+
+def _psum_global(comm):
+    # local psum over this worker's private sub-mesh, then a cross-process
+    # reduction through the hub — the heterogeneous communicator spanning
+    # nodes that the paper builds with MPI groups
+    return sum(comm.allgather(_psum_local(comm)))
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_real_jax_mesh_per_worker_and_cross_process_reduction():
+    """build_comm=True: each part gets a private JAX sub-mesh over its
+    worker-local devices (comm_build flows into the trace) and the spanning
+    task combines per-node psums into the global reduction."""
+    with ProcessExecutor(n_workers=2, devices_per_worker=2,
+                         build_comm=True, heartbeat_interval=0.3) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run(
+            [TaskDescription(name="local", ranks=2, fn=_psum_local,
+                             tags={"pipeline": "p"}),
+             TaskDescription(name="global", ranks=4, fn=_psum_global,
+                             tags={"pipeline": "p"})],
+            timeout=240)
+        by = {t.desc.name: t for t in rep.tasks}
+        assert by["local"].state == TaskState.DONE
+        assert by["local"].result == 4.0          # 2 ranks x 2 cols
+        assert by["global"].result == 8.0         # 4 ranks x 2 cols
+        assert len(rep.events("comm_build")) == 2
+        assert rep.overhead_total > 0
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_unserializable_result_fails_cleanly():
+    with ProcessExecutor(n_workers=1, devices_per_worker=1,
+                         build_comm=False, heartbeat_interval=0.2) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="bad", ranks=1,
+                                        fn=_return_unpicklable, max_retries=0,
+                                        tags={"pipeline": "p"})], timeout=60)
+        task = rep.tasks[0]
+        assert task.state == TaskState.FAILED
+        assert task.error
+
+
+def _return_unpicklable(comm):
+    return threading.Lock()     # cannot cross a process boundary

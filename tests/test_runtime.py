@@ -119,6 +119,21 @@ def test_resource_manager_allocate_release():
         rm.allocate(7)
 
 
+def test_resource_manager_double_release_is_idempotent():
+    """Releasing the same device twice must not duplicate it in the free
+    list — a duplicated handle could satisfy two concurrent allocations
+    with one physical device."""
+    rm = ResourceManager(list(range(4)))
+    got = rm.allocate(2)
+    rm.release(got)
+    rm.release(got)               # double release (e.g. retry + reaper race)
+    assert rm.n_free == 4
+    a = rm.allocate(4)
+    assert len(set(a)) == 4       # every handle issued exactly once
+    with pytest.raises(Exception):
+        rm.allocate(1)
+
+
 def test_pilot_carves_from_global_pool():
     pm = PilotManager(devices=list(range(16)))
     p = pm.submit_pilot(PilotDescription(n_devices=10))
