@@ -117,6 +117,77 @@ def proc_dispatch_overhead(n_tasks: int = 24):
     return rows
 
 
+def _placement_hold(comm, dur=0.6):
+    import time as _t
+    _t.sleep(dur)
+    return "held"
+
+
+def _placement_probe(comm, n_coll=16):
+    """A spanning-size payload: n_coll allgathers.  Under pack (one part on
+    one worker) they complete locally; under spread (parts straddling
+    workers) each is a parent-hub round-trip.  The thread backend's comm has
+    no cross-process collectives (one address space) — skipped there."""
+    size = getattr(comm, "local_size", comm.size)
+    for _ in range(n_coll):
+        if hasattr(comm, "allgather"):
+            comm.allgather(size)
+    return getattr(comm, "hub_calls", 0)
+
+
+def placement_compare(n_coll: int = 16):
+    """Placement policy comparison (the tentpole claim): a task that FITS one
+    worker but is dispatched over a fragmented pool.  ``spread`` reproduces
+    the historical flat order — the task straddles two workers and pays
+    ``n_coll`` hub collectives; ``pack`` places it on a single worker: zero
+    hub collectives.  Reported per backend: hub-collective count and the
+    probe task's wall time (dispatch->done from the trace)."""
+    from repro.core import (ProcessExecutor, ResourceManager,
+                            SchedulerSession, TaskDescription, ThreadExecutor)
+
+    def descs():
+        return [TaskDescription(name="hold", ranks=1, fn=_placement_hold,
+                                tags={"pipeline": "bench"}),
+                TaskDescription(name="probe", ranks=2, fn=_placement_probe,
+                                kwargs={"n_coll": n_coll},
+                                tags={"pipeline": "bench"})]
+
+    def probe_wall(report):
+        disp = {e.task: e.t for e in report.trace if e.kind == "dispatch"}
+        done = {e.task: e.t for e in report.trace if e.kind == "done"}
+        return done["probe"] - disp["probe"]
+
+    rows = []
+    for placement in ("spread", "pack"):
+        with ProcessExecutor(n_workers=2, devices_per_worker=2,
+                             build_comm=False, tick=0.005,
+                             extra_pythonpath=[str(ROOT)]) as ex:
+            sess = SchedulerSession(ex, ex.resource_manager(), tick=0.005,
+                                    placement=placement)
+            rep = sess.run(descs(), timeout=120)
+            by = {t.desc.name: t for t in rep.tasks}
+            hub = by["probe"].result
+            wall = probe_wall(rep)
+        emit(f"placement/proc/{placement}", wall * 1e6,
+             f"hub_collectives={hub};n_coll={n_coll}")
+        rows.append({"backend": "proc", "placement": placement,
+                     "hub_collectives": hub, "wall_s": wall})
+    for placement in ("spread", "pack"):
+        # thread backend: one address space, so placement cannot change the
+        # collective count (always 0 hub trips) — the baseline that shows
+        # the win is specific to the multi-process topology
+        sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.005),
+                                ResourceManager([f"d{i}" for i in range(4)]),
+                                tick=0.005, placement=placement)
+        rep = sess.run(descs(), timeout=120)
+        wall = probe_wall(rep)
+        emit(f"placement/thread/{placement}", wall * 1e6,
+             "hub_collectives=0")
+        rows.append({"backend": "thread", "placement": placement,
+                     "hub_collectives": 0, "wall_s": wall})
+    return rows
+
+
 def run():
     out = run_with_devices(SNIPPET.replace("%RANKS%", str(RANKS)), 544,
                            timeout=900)  # 544 > 518 max paper rank count
@@ -132,6 +203,10 @@ def run():
     if os.environ.get("BENCH_PROC", "0") == "1" or "--proc" in sys.argv:
         # opt-in: spawns worker interpreters, adds ~5s to the section
         res["proc_dispatch"] = proc_dispatch_overhead()
+    if os.environ.get("BENCH_PLACEMENT", "0") == "1" or \
+            "--placement" in sys.argv:
+        # opt-in: pack-vs-spread for a spanning-size task (worker processes)
+        res["placement"] = placement_compare()
     return res
 
 

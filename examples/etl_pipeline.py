@@ -120,7 +120,8 @@ def print_timeline(report, t0):
                   f"ranks={e.ranks}")
 
 
-def _run_policies(n, make_executor, make_rm):
+def _run_policies(n, make_executor, make_rm, placement="spread",
+                  work_stealing=False):
     from repro.core import BATCH, HETEROGENEOUS, run_pipelines
     results = {}
     for policy in (HETEROGENEOUS, BATCH):
@@ -133,16 +134,21 @@ def _run_policies(n, make_executor, make_rm):
             # separately below
             pipes = build_pipelines(n, full_width=False)
             res, rep = run_pipelines(pipes, make_rm(ex),
-                                     policy=policy, timeout=900, executor=ex)
+                                     policy=policy, timeout=900, executor=ex,
+                                     placement=placement,
+                                     work_stealing=work_stealing)
             assert res[("join", "summarize")].startswith("summary")
             assert res[("sort", "merge")].startswith("merged")
         finally:
             if hasattr(ex, "shutdown"):
                 ex.shutdown()
         results[policy] = rep.makespan
+        stolen = rep.events("steal")
+        extra = f", {len(stolen)} steals" if stolen else ""
         print(f"[{policy:>13s}] makespan {rep.makespan:.2f}s  "
               f"(comm-build total {rep.overhead_total * 1e3:.1f}ms, "
-              f"{len(rep.events('dispatch'))} dispatches)")
+              f"{len(rep.events('dispatch'))} dispatches, "
+              f"placement={placement}{extra})")
         print_timeline(rep, t0)
     impr = (results[BATCH] - results[HETEROGENEOUS]) / results[BATCH] * 100
     print(f"heterogeneous vs batch improvement: {impr:.1f}% "
@@ -156,6 +162,13 @@ def main():
     ap.add_argument("--workers", type=int, default=2,
                     help="process backend: worker interpreters (nodes)")
     ap.add_argument("--devices-per-worker", type=int, default=2)
+    ap.add_argument("--placement", choices=("spread", "pack"),
+                    default="spread",
+                    help="pack keeps a fitting task's ranks on one worker "
+                         "(process backend: no hub collectives)")
+    ap.add_argument("--work-stealing", action="store_true",
+                    help="batch policy: backlogged partitions lease idle "
+                         "devices from sibling partitions")
     args = ap.parse_args()
 
     if args.backend == "thread":
@@ -167,7 +180,8 @@ def main():
             n,
             make_executor=lambda: ThreadExecutor(),
             make_rm=lambda ex: PilotManager().submit_pilot(
-                PilotDescription(n_devices=n)).resource_manager)
+                PilotDescription(n_devices=n)).resource_manager,
+            placement=args.placement, work_stealing=args.work_stealing)
     else:
         from repro.core import (ProcessExecutor, SchedulerSession,
                                 TaskDescription)
@@ -182,7 +196,8 @@ def main():
                 n_workers=args.workers,
                 devices_per_worker=args.devices_per_worker,
                 build_comm=True).start(),
-            make_rm=lambda ex: ex.resource_manager())
+            make_rm=lambda ex: ex.resource_manager(),
+            placement=args.placement, work_stealing=args.work_stealing)
         # the paper's multi-node headline: ONE task whose communicator spans
         # every worker process — per-node sub-mesh sorts combined through
         # the cross-process allgather

@@ -3,7 +3,9 @@
 Cylon-style dataframe ops and LM train/serve steps — on dynamically carved
 sub-meshes with private communicators, plus the batch-execution baseline it
 is compared against in the paper."""
-from repro.core.communicator import Communicator, build_communicator
+from repro.core.communicator import (
+    Communicator, build_communicator, degenerate_axes,
+)
 from repro.core.pilot import (
     InsufficientResources, Pilot, PilotDescription, PilotManager,
     ResourceManager,
@@ -11,20 +13,22 @@ from repro.core.pilot import (
 from repro.core.pipeline import Pipeline, Stage, run_pipelines
 from repro.core.raptor import RaptorMaster, session
 from repro.core.scheduler import (
-    BATCH, HETEROGENEOUS, ExecEvent, Executor, LiveScheduler, ProcDevice,
-    ProcessExecutor, SchedulerSession, SimOptions, SimReport, StubComm,
-    ThreadExecutor, TraceEvent, VirtualClockExecutor, default_overhead_model,
-    interleave_by_pipeline, simulate,
+    BATCH, HETEROGENEOUS, PACK, PLACEMENTS, SPREAD, ExecEvent, Executor,
+    LiveScheduler, ProcDevice, ProcessExecutor, SchedulerSession, SimOptions,
+    SimReport, StubComm, ThreadExecutor, Topology, TraceEvent,
+    VirtualClockExecutor, default_overhead_model, interleave_by_pipeline,
+    simulate,
 )
 from repro.core.task import Task, TaskDescription, TaskState
 
 __all__ = [
-    "BATCH", "HETEROGENEOUS", "Communicator", "ExecEvent", "Executor",
-    "InsufficientResources", "LiveScheduler", "Pilot", "PilotDescription",
-    "PilotManager", "Pipeline", "ProcDevice", "ProcessExecutor",
-    "RaptorMaster", "ResourceManager", "SchedulerSession", "SimOptions",
-    "SimReport", "Stage", "StubComm", "Task", "TaskDescription", "TaskState",
-    "ThreadExecutor", "TraceEvent", "VirtualClockExecutor",
-    "build_communicator", "default_overhead_model", "interleave_by_pipeline",
-    "run_pipelines", "session", "simulate",
+    "BATCH", "HETEROGENEOUS", "PACK", "PLACEMENTS", "SPREAD", "Communicator",
+    "ExecEvent", "Executor", "InsufficientResources", "LiveScheduler",
+    "Pilot", "PilotDescription", "PilotManager", "Pipeline", "ProcDevice",
+    "ProcessExecutor", "RaptorMaster", "ResourceManager", "SchedulerSession",
+    "SimOptions", "SimReport", "Stage", "StubComm", "Task", "TaskDescription",
+    "TaskState", "ThreadExecutor", "Topology", "TraceEvent",
+    "VirtualClockExecutor", "build_communicator", "default_overhead_model",
+    "degenerate_axes", "interleave_by_pipeline", "run_pipelines", "session",
+    "simulate",
 ]

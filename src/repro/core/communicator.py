@@ -23,18 +23,39 @@ class Communicator:
     shape: tuple
     build_seconds: float
     uid: str = ""
+    placement: str = ""           # policy that placed the devices (pack|
+    # spread; "" when allocation bypassed the scheduler's placement layer)
 
     @property
     def size(self) -> int:
         return len(self.devices)
 
+    @property
+    def degenerate_axes(self) -> tuple:
+        """Axis names whose extent collapsed to 1 in a multi-rank mesh —
+        see :func:`degenerate_axes`."""
+        return tuple(self.axes[i] for i in degenerate_axes(self.shape))
+
     def sub(self, axis: str):
         """Axis size lookup (MPI_Comm_size analogue per axis)."""
-        return dict(zip(self.axes, self.shape))[axis]
+        try:
+            return dict(zip(self.axes, self.shape))[axis]
+        except KeyError:
+            raise ValueError(
+                f"unknown mesh axis {axis!r}; this communicator has axes "
+                f"{self.axes}") from None
 
 
 def _factor_shape(n: int, naxes: int) -> tuple:
-    """Default near-square factorization of n ranks into naxes axes."""
+    """Default factorization of ``n`` ranks into ``naxes`` axes, largest
+    factor first (so any degenerate size-1 factors trail, e.g. prime ``n``
+    with ``naxes=2`` gives ``(n, 1)``, never ``(1, n)``).
+
+    A prime or near-prime ``n`` cannot be factored into ``naxes``
+    non-trivial axes; the result then contains size-1 axes — a *degenerate*
+    mesh that behaves like a lower-dimensional one (collectives over a
+    size-1 axis are no-ops).  Callers that care should check
+    :func:`degenerate_axes` instead of assuming every axis is usable."""
     if naxes == 1:
         return (n,)
     shape = []
@@ -46,13 +67,29 @@ def _factor_shape(n: int, naxes: int) -> tuple:
         shape.append(max(f, 1))
         rem //= max(f, 1)
     shape.append(rem)
-    return tuple(shape)
+    return tuple(sorted(shape, reverse=True))
+
+
+def degenerate_axes(shape: tuple) -> tuple:
+    """Indices of size-1 axes in a multi-rank mesh shape.
+
+    ``(7, 1)`` -> ``(1,)``: the second axis exists in name only — a
+    collective over it is a no-op, so code partitioning work along it gets
+    no parallelism.  A genuinely single-rank mesh (total size 1) has no
+    usable parallelism on ANY axis, so nothing is flagged: ``(1,)`` and
+    ``(1, 1)`` -> ``()``."""
+    if int(np.prod(shape)) <= 1:
+        return ()
+    return tuple(i for i, s in enumerate(shape) if s == 1)
 
 
 def build_communicator(devices, axes=("df",), shape: Optional[tuple] = None,
-                       uid: str = "") -> Communicator:
+                       uid: str = "", placement: str = "") -> Communicator:
     """Construct the private mesh over ``devices`` (the heterogeneous-runtime
-    core: every task gets its own isolated communicator, any size)."""
+    core: every task gets its own isolated communicator, any size).
+    ``placement`` records which policy chose the devices (pack/spread) so a
+    payload — and the trace consumers — can see how its ranks were laid
+    out."""
     from jax.sharding import Mesh
 
     t0 = time.perf_counter()
@@ -63,4 +100,5 @@ def build_communicator(devices, axes=("df",), shape: Optional[tuple] = None,
     mesh = Mesh(arr, axes)
     dt = time.perf_counter() - t0
     return Communicator(mesh=mesh, devices=tuple(devices), axes=tuple(axes),
-                        shape=tuple(shape), build_seconds=dt, uid=uid)
+                        shape=tuple(shape), build_seconds=dt, uid=uid,
+                        placement=placement)

@@ -76,6 +76,19 @@ class Executor(abc.ABC):
         cannot be killed; the core ignores the event and reclaims then)."""
         return False
 
+    def topology(self, devices):
+        """Locality report for ``devices``: a ``placement.Topology`` grouping
+        the handles by the node that hosts them.  Placement policies (pack /
+        spread) consult it so a task's ranks can be kept on one node.
+
+        Default: everything on one node — correct for in-process executors
+        (``ThreadExecutor``), where every device shares an address space.
+        ``ProcessExecutor`` reports one node per worker interpreter;
+        ``VirtualClockExecutor`` synthesizes nodes per
+        ``SimOptions.devices_per_node``."""
+        from repro.core.placement import Topology
+        return Topology({"node0": tuple(devices)})
+
 
 class QueueEventExecutor(Executor):
     """Shared wall-clock plumbing for live executors: completion events are

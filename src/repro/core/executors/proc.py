@@ -299,6 +299,17 @@ class ProcessExecutor(QueueEventExecutor):
     def resource_manager(self) -> ResourceManager:
         return ResourceManager(self.devices())
 
+    def topology(self, devices):
+        """One node per worker interpreter: a ``ProcDevice`` lives on node
+        ``worker``.  This is the report the pack policy uses to keep a
+        fitting task's ranks inside ONE worker — a single local sub-mesh,
+        zero parent-hub collectives."""
+        from repro.core.placement import Topology
+        nodes: dict = {}
+        for d in devices:
+            nodes.setdefault(getattr(d, "worker", "node0"), []).append(d)
+        return Topology(nodes)
+
     # ------------------------------------------------------------------ #
     # Executor interface (now comes from QueueEventExecutor)
     # ------------------------------------------------------------------ #
@@ -356,7 +367,8 @@ class ProcessExecutor(QueueEventExecutor):
                     world_size=task.desc.ranks, payload=payload,
                     mesh_axes=task.desc.mesh_axes,
                     mesh_shape=task.desc.mesh_shape,
-                    build_comm=self.build_comm)
+                    build_comm=self.build_comm,
+                    placement=task.placement)
             except ConnectionClosed:
                 # this part (and the never-launched rest) can't run; parts
                 # already launched on other workers complete the tracker

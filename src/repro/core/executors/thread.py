@@ -17,6 +17,7 @@ class StubComm:
     devices: tuple
     mesh: Any = None
     build_seconds: float = 0.0
+    placement: str = ""          # policy that placed the devices (pack|spread)
 
     @property
     def size(self) -> int:
@@ -42,10 +43,12 @@ class ThreadExecutor(QueueEventExecutor):
                     comm = build_communicator(task.devices,
                                               task.desc.mesh_axes,
                                               task.desc.mesh_shape,
-                                              uid=f"task{task.uid}")
+                                              uid=f"task{task.uid}",
+                                              placement=task.placement)
                     comm_s = comm.build_seconds
                 else:
-                    comm = StubComm(devices=tuple(task.devices))
+                    comm = StubComm(devices=tuple(task.devices),
+                                    placement=task.placement)
                 res = task.desc.fn(comm, *task.desc.args, **task.desc.kwargs)
                 self._q.put(ExecEvent("done", task=task, result=res,
                                       comm_build_s=comm_s))

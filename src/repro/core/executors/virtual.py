@@ -36,6 +36,10 @@ class SimOptions:
     speculative_factor: Optional[float] = None   # e.g. 1.5 -> spec-exec on
     failure_prob: float = 0.0            # chance a task attempt fails
     device_failures: Sequence[tuple] = ()  # [(time_s, n_devices), ...]
+    placement: str = "spread"            # pack|spread (see core/placement.py)
+    work_stealing: bool = False          # BATCH: lease idle partition devices
+    devices_per_node: int = 0            # synthetic topology: devices per
+    # simulated node (0 -> the whole pool is one node, topology-blind)
 
 
 class VirtualClockExecutor(Executor):
@@ -98,3 +102,19 @@ class VirtualClockExecutor(Executor):
     def cancel(self, task: Task) -> bool:
         self._canceled.add(task.uid)
         return True
+
+    def topology(self, devices):
+        """Synthetic nodes: integer device ``d`` lives on node
+        ``n{d // devices_per_node}`` — a stable assignment, so the same
+        device maps to the same node no matter which subset (e.g. a pool's
+        free list) is being classified.  Non-integer handles, or
+        ``devices_per_node == 0``, degrade to one flat node (the historical
+        topology-blind view)."""
+        from repro.core.placement import Topology
+        k = self.opts.devices_per_node
+        if k <= 0 or not all(isinstance(d, int) for d in devices):
+            return Topology({"node0": tuple(devices)})
+        nodes: dict = {}
+        for d in devices:
+            nodes.setdefault(f"n{d // k}", []).append(d)
+        return Topology(nodes)

@@ -102,7 +102,8 @@ class ProcTaskComm:
     def __init__(self, uid: int, world_size: int, global_ranks: tuple,
                  part: int, n_parts: int, local_comm, hub: _Hub,
                  attempt: int = 0, coll_timeout: float = 120.0,
-                 cancelled: Optional[threading.Event] = None):
+                 cancelled: Optional[threading.Event] = None,
+                 placement: str = ""):
         self.uid = uid
         self.attempt = attempt
         self.world_size = world_size
@@ -111,6 +112,10 @@ class ProcTaskComm:
         self.n_parts = n_parts
         self.local_comm = local_comm
         self.cancelled = cancelled or threading.Event()
+        self.placement = placement   # policy that placed this task (pack|
+        # spread); under pack a fitting task has n_parts == 1 and its
+        # collectives below never touch the hub
+        self.hub_calls = 0           # parent-hub round-trips actually paid
         self._hub = hub
         self._seq = 0
         self._coll_timeout = coll_timeout
@@ -149,8 +154,20 @@ class ProcTaskComm:
     def allgather(self, obj) -> list:
         """Gather one object per *part* (worker share), same list everywhere,
         ordered by part index.  Parts must call collectives in the same
-        order — the usual SPMD contract."""
+        order — the usual SPMD contract.
+
+        A single-part task (all ranks on this worker — what the pack policy
+        arranges whenever the task fits one node) completes the collective
+        locally: no hub round-trip, no parent traffic.  The serialize
+        round-trip is kept so the result has identical copy semantics to the
+        spanning case (mutating it never aliases the caller's object)."""
+        if self.n_parts == 1:
+            if self.cancelled.is_set():
+                raise CollectiveError("task cancelled")
+            self._seq += 1
+            return [serialize.loads(serialize.dumps(obj))]
         seq, self._seq = self._seq, self._seq + 1
+        self.hub_calls += 1
         values = self._hub.call(self.uid, self.attempt, seq, self.part,
                                 serialize.dumps(obj), self._coll_timeout)
         return [serialize.loads(v) for v in values]
@@ -205,15 +222,18 @@ class Worker:
                 from repro.core.communicator import build_communicator
                 shape = d["mesh_shape"] if d["n_parts"] == 1 else None
                 local = build_communicator(devs, d["mesh_axes"], shape,
-                                           uid=f"task{uid}.p{part}")
+                                           uid=f"task{uid}.p{part}",
+                                           placement=d.get("placement", ""))
                 comm_s = local.build_seconds
             else:
-                local = StubComm(devices=devs)
+                local = StubComm(devices=devs,
+                                 placement=d.get("placement", ""))
             comm = ProcTaskComm(uid=uid, world_size=d["world_size"],
                                 global_ranks=d["global_ranks"], part=part,
                                 n_parts=d["n_parts"], local_comm=local,
                                 hub=self.hub, attempt=attempt,
-                                cancelled=cancelled)
+                                cancelled=cancelled,
+                                placement=d.get("placement", ""))
             fn, args, kwargs = serialize.loads(d["payload"])
             res = fn(comm, *args, **kwargs)
             self.chan.send(protocol.PART_DONE, uid=uid, attempt=attempt,

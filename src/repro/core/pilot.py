@@ -57,20 +57,41 @@ class ResourceManager:
             return device in self._all
 
     def allocate(self, n: int, exclude: Sequence = ()) -> tuple:
-        """Allocate ``n`` devices, preferring ones not in ``exclude`` (used
-        by retry-with-device-exclusion: a task avoids devices its previous
-        attempts failed on, falling back to them only when nothing else is
-        free)."""
+        """Historical flat allocation: first ``n`` free devices in pool
+        order, excluded devices last.  Shim over :meth:`allocate_placed`
+        with no topology — i.e. the ``spread`` placement."""
+        return self.allocate_placed(n, exclude=exclude)
+
+    def allocate_placed(self, n: int, topology=None,
+                        policy: Optional[str] = None,
+                        exclude: Sequence = ()) -> tuple:
+        """Allocate ``n`` devices honouring a placement policy.
+
+        ``topology`` is a :class:`repro.core.placement.Topology` over (a
+        superset of) this pool's devices, or a callable producing one from
+        the current free list — the scheduler passes the executor's
+        ``topology`` method so grouping happens atomically under the pool
+        lock.  ``policy`` is ``"spread"`` (historical flat order; default)
+        or ``"pack"`` (fewest distinct nodes; see ``placement.plan``).
+        Devices in ``exclude`` are chosen only when nothing else fits (the
+        retry-with-device-exclusion contract)."""
+        from repro.core.placement import SPREAD, _exclude_last, plan
         with self._lock:
             if len(self._free) < n:
                 raise InsufficientResources(f"want {n}, free {len(self._free)}")
-            if exclude:
-                exclude = set(exclude)
-                ordered = [d for d in self._free if d not in exclude] + \
-                          [d for d in self._free if d in exclude]
-            else:
-                ordered = self._free
-            got, self._free = ordered[:n], ordered[n:]
+            if policy is None or policy == SPREAD:
+                # the historical flat path, preserved EXACTLY — including the
+                # excluded-last reordering persisting into the remaining free
+                # list — so pre-placement schedules reproduce bit-for-bit;
+                # the topology is never materialized here (spread ignores it)
+                ordered = _exclude_last(self._free, set(exclude))
+                got, self._free = ordered[:n], ordered[n:]
+                return tuple(got)
+            if callable(topology):
+                topology = topology(tuple(self._free))
+            got = plan(n, self._free, topology, policy, exclude)
+            taken = set(got)
+            self._free = [d for d in self._free if d not in taken]
             return tuple(got)
 
     def release(self, devices: Sequence):

@@ -18,7 +18,8 @@ import dataclasses
 from typing import Any, Callable, Optional, Sequence
 
 from repro.core.scheduler import (
-    HETEROGENEOUS, Executor, SchedulerSession, SimReport, ThreadExecutor,
+    HETEROGENEOUS, SPREAD, Executor, SchedulerSession, SimReport,
+    ThreadExecutor,
 )
 from repro.core.task import TaskDescription, TaskState
 
@@ -72,7 +73,8 @@ class Pipeline:
 
 def run_pipelines(pipelines: Sequence[Pipeline], resource_manager,
                   policy: str = HETEROGENEOUS, timeout: float = 600.0,
-                  executor: Optional[Executor] = None):
+                  executor: Optional[Executor] = None,
+                  placement: str = SPREAD, work_stealing: bool = False):
     """Execute several MPMD pipelines concurrently on one device pool.
 
     Continuous dependency release: each stage is submitted to the persistent
@@ -80,13 +82,16 @@ def run_pipelines(pipelines: Sequence[Pipeline], resource_manager,
     never held hostage by an unrelated still-running sibling stage.  Pass a
     :class:`VirtualClockExecutor` as ``executor`` to run the same DAG logic
     on the virtual clock (stages then need ``duration_model`` instead of
-    ``fn``).  Returns ``(results, report)`` where ``report.trace`` holds the
-    per-task event timeline."""
+    ``fn``).  ``placement`` selects the topology policy (``spread``/``pack``,
+    see ``core/placement.py``); ``work_stealing=True`` lets BATCH partitions
+    lease each other's idle devices.  Returns ``(results, report)`` where
+    ``report.trace`` holds the per-task event timeline."""
     results: dict[tuple, Any] = {}
     remaining = {(p.name, s): p.stages[s] for p in pipelines for s in p.stages}
     sess = SchedulerSession(executor or ThreadExecutor(), resource_manager,
                             policy=policy,
-                            pipelines=[p.name for p in pipelines])
+                            pipelines=[p.name for p in pipelines],
+                            placement=placement, work_stealing=work_stealing)
     key_of: dict[int, tuple] = {}
     submitted: set[tuple] = set()
 

@@ -24,8 +24,18 @@ elastic shrink/grow for free — previously these existed only in the sim.
 The session is persistent: tasks may be submitted while others run
 (continuous DAG release, see ``core/pipeline.py``), and every lifecycle step
 is appended to a per-task event trace (``TraceEvent``: submit / dispatch /
-comm_build / done / fail / retry / speculate / cancel / device_failure)
-consumed uniformly by the benchmarks and ``SimReport``.
+comm_build / done / fail / retry / speculate / cancel / device_failure /
+steal / return) consumed uniformly by the benchmarks and ``SimReport``.
+
+Placement (``core/placement.py``) makes dispatch topology-aware: the core
+asks the executor for its :class:`Topology` (node -> device handles) and
+allocates through ``ResourceManager.allocate_placed`` under a placement
+policy — ``spread`` (historical flat order) or ``pack`` (fewest nodes; on
+the process executor a fitting task lands on ONE worker and its collectives
+never touch the parent hub).  Under ``BATCH``, ``work_stealing=True`` makes
+the static partitions elastic: a partition with a backlog leases idle
+devices a sibling partition doesn't need (``steal`` trace event) and hands
+them back on release (``return``).
 """
 from __future__ import annotations
 
@@ -40,14 +50,15 @@ from repro.core.executors import (
     ThreadExecutor, VirtualClockExecutor, default_overhead_model,
 )
 from repro.core.pilot import InsufficientResources, ResourceManager
+from repro.core.placement import PACK, PLACEMENTS, SPREAD, Topology
 from repro.core.task import Task, TaskDescription, TaskState
 
 __all__ = [  # executor names are re-exported for historical import paths
-    "BATCH", "HETEROGENEOUS", "ExecEvent", "Executor", "LiveScheduler",
-    "ProcDevice", "ProcessExecutor", "SchedulerSession", "SimOptions",
-    "SimReport", "StubComm", "ThreadExecutor", "TraceEvent",
-    "VirtualClockExecutor", "default_overhead_model",
-    "interleave_by_pipeline", "simulate",
+    "BATCH", "HETEROGENEOUS", "PACK", "PLACEMENTS", "SPREAD", "ExecEvent",
+    "Executor", "LiveScheduler", "ProcDevice", "ProcessExecutor",
+    "SchedulerSession", "SimOptions", "SimReport", "StubComm",
+    "ThreadExecutor", "Topology", "TraceEvent", "VirtualClockExecutor",
+    "default_overhead_model", "interleave_by_pipeline", "simulate",
 ]
 
 HETEROGENEOUS = "heterogeneous"
@@ -82,13 +93,14 @@ def interleave_by_pipeline(tasks):
 class TraceEvent:
     t: float          # executor clock (virtual seconds or perf_counter)
     kind: str         # submit|dispatch|comm_build|done|fail|retry|speculate|
-                      # cancel|device_failure
+                      # cancel|device_failure|steal|return
     task: str = ""    # task name ("" for pool-level events)
     uid: int = -1
     pipeline: str = ""
     ranks: int = 0
     value: float = 0.0   # kind-specific payload (comm_build: seconds;
-                         # device_failure: #devices lost)
+                         # device_failure: #devices lost; steal/return:
+                         # #devices leased across partitions / handed back)
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -131,10 +143,16 @@ class SchedulerSession:
                  policy: str = HETEROGENEOUS,
                  pipelines: Optional[Sequence[str]] = None,
                  speculative_factor: Optional[float] = None,
-                 tick: float = 0.05):
+                 tick: float = 0.05, placement: str = SPREAD,
+                 work_stealing: bool = False):
+        if placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {placement!r}; expected "
+                             f"one of {PLACEMENTS}")
         self.executor = executor
         self.rm = resource_manager
         self.policy = policy
+        self.placement = placement
+        self.work_stealing = work_stealing
         self.speculative_factor = speculative_factor
         self.tick = tick
         self.t0 = executor.now()
@@ -152,6 +170,9 @@ class SchedulerSession:
         self._declared = list(pipelines) if pipelines else []
         self._pools: Optional[dict[str, ResourceManager]] = None
         self._batch_devs: tuple = ()
+        self._leases: dict[int, list] = {}   # uid -> [(lender_pool, devs)]:
+        # work-stealing bookkeeping so released devices return to the
+        # partition they were leased from, never the thief's own pool
         self._max_timeout = 0.0   # largest wait budget seen; sizes the reaper
 
     # -- trace ------------------------------------------------------------
@@ -362,22 +383,105 @@ class SchedulerSession:
         return self.close()
 
     # -- internals --------------------------------------------------------
+    def _allocate(self, pool: ResourceManager, n: int, exclude) -> tuple:
+        """All scheduler allocations flow through the placement layer: the
+        executor's topology report + the session's placement policy decide
+        WHICH free devices a task gets, not just how many."""
+        return pool.allocate_placed(n, topology=self.executor.topology,
+                                    policy=self.placement, exclude=exclude)
+
+    def _pending_need(self) -> dict:
+        """Per-pool rank demand of the pending queue (keyed by pool id) —
+        the floor below which a partition will not lend devices.  Computed
+        once per dispatch sweep, decremented as tasks dispatch, so a deep
+        backlog stays O(pending) per sweep instead of O(pending^2)."""
+        need: dict[int, int] = {}
+        for p in self.pending:
+            pid = id(self._pool_of(p))
+            need[pid] = need.get(pid, 0) + p.desc.ranks
+        return need
+
+    def _try_steal(self, task: Task, home: ResourceManager,
+                   pending_need: dict) -> bool:
+        """BATCH elasticity via work-stealing: when ``task`` overflows its
+        own static partition, lease the shortfall from sibling partitions
+        that have idle devices beyond their OWN pending demand (the
+        ``pending_need`` floor; the thief's own demand presses only on its
+        home pool, which is never a lender to itself).  Leased devices are
+        tracked per task and handed back to their lender on release
+        (``steal``/``return`` trace events) — the partitions stay
+        statically owned, only idle capacity moves."""
+        need = task.desc.ranks - home.n_free
+        offers: list = []
+        offered = 0
+        for victim in self._pools.values():
+            if victim is home or offered == need:
+                continue
+            spare = victim.n_free - pending_need.get(id(victim), 0)
+            take = min(max(spare, 0), need - offered)
+            if take > 0:
+                offers.append((victim, take))
+                offered += take
+        if offered < need:
+            return False
+        leases = []
+        stolen: list = []
+        for victim, take in offers:
+            got = self._allocate(victim, take, task.excluded_devices)
+            leases.append((victim, got))
+            stolen.extend(got)
+        own = self._allocate(home, task.desc.ranks - len(stolen),
+                             task.excluded_devices)
+        task.devices = tuple(own) + tuple(stolen)
+        self._leases[task.uid] = leases
+        self._tr("steal", task, value=float(len(stolen)))
+        return True
+
+    def _release_task(self, task: Task):
+        """Hand a task's devices back: leased devices return to the
+        partition that lent them (``return`` trace event), the rest to the
+        task's home pool.  The event's value counts devices ACTUALLY handed
+        back — a leased device that died mid-lease left the lender's
+        inventory via its device_failure event and must not be double-
+        counted as returned."""
+        leases = self._leases.pop(task.uid, None)
+        if not leases:
+            self._pool_of(task).release(task.devices)
+            return
+        leased: set = set()
+        returned = 0
+        for lender, devs in leases:
+            returned += sum(1 for d in devs if d in lender)
+            lender.release(devs)
+            leased.update(devs)
+        self._pool_of(task).release([d for d in task.devices
+                                     if d not in leased])
+        self._tr("return", task, value=float(returned))
+
     def _dispatch(self):
         progressed = True
+        stealing = self.work_stealing and self.policy == BATCH
         while progressed:
             progressed = False
+            pending_need = self._pending_need() if stealing else None
             for task in interleave_by_pipeline(list(self.pending)):
                 pool = self._pool_of(task)
                 if pool.n_free >= task.desc.ranks:
-                    task.devices = pool.allocate(task.desc.ranks,
-                                                 exclude=task.excluded_devices)
-                    self.pending.remove(task)
-                    task.state = TaskState.RUNNING
-                    task.start_time = self.executor.now()
-                    self.running[task.uid] = task
-                    self._tr("dispatch", task)
-                    self.executor.launch(task)
-                    progressed = True
+                    task.devices = self._allocate(pool, task.desc.ranks,
+                                                  task.excluded_devices)
+                elif not (stealing
+                          and self._try_steal(task, pool, pending_need)):
+                    continue
+                if pending_need is not None:   # dispatched: its demand no
+                    pending_need[id(pool)] -= task.desc.ranks   # longer queues
+                self.pending.remove(task)
+                task.state = TaskState.RUNNING
+                task.placement = self.placement
+                task.start_time = self.executor.now()
+                self.running[task.uid] = task
+                self._tr("dispatch", task)
+                self.executor.launch(task)
+                progressed = True
 
     def _maybe_speculate(self):
         """Spec-exec: if a running task exceeds factor x median of completed
@@ -406,8 +510,9 @@ class SchedulerSession:
                     dup.state = TaskState.RUNNING
                     dup.submit_time = now
                     dup.start_time = now
-                    dup.devices = pool.allocate(task.desc.ranks,
-                                                exclude=set(task.devices))
+                    dup.placement = self.placement
+                    dup.devices = self._allocate(pool, task.desc.ranks,
+                                                 set(task.devices))
                     self.running[dup.uid] = dup
                     self._tr("speculate", dup)
                     self.executor.launch(dup, duration_hint=med)
@@ -426,7 +531,7 @@ class SchedulerSession:
                 self._tr("cancel", r)
                 if self.executor.cancel(r):
                     del self.running[r.uid]
-                    self._pool_of(r).release(r.devices)
+                    self._release_task(r)
                 else:
                     # the live thread finishes on its own; its event only
                     # releases the devices in _handle
@@ -468,7 +573,7 @@ class SchedulerSession:
         if task.uid not in self.running:
             return []    # event for a task already aborted by the executor
         del self.running[task.uid]
-        self._pool_of(task).release(task.devices)
+        self._release_task(task)
         if task.uid in self._ignored:
             self._ignored.discard(task.uid)
             self._dispatch()   # live twin finished after cancel: reclaim only
@@ -544,7 +649,9 @@ def simulate(descs: Sequence[TaskDescription], n_devices: int,
     rm = ResourceManager(list(range(n_devices)))
     sess = SchedulerSession(VirtualClockExecutor(opts), rm,
                             policy=opts.policy,
-                            speculative_factor=opts.speculative_factor)
+                            speculative_factor=opts.speculative_factor,
+                            placement=opts.placement,
+                            work_stealing=opts.work_stealing)
     return sess.run(descs)
 
 
@@ -563,9 +670,12 @@ class LiveScheduler:
     def __init__(self, resource_manager: ResourceManager,
                  policy: str = HETEROGENEOUS,
                  speculative_factor: Optional[float] = None,
-                 executor: Optional[Executor] = None):
+                 executor: Optional[Executor] = None,
+                 placement: str = SPREAD, work_stealing: bool = False):
         self.rm = resource_manager
         self.policy = policy
+        self.placement = placement
+        self.work_stealing = work_stealing
         self.speculative_factor = speculative_factor
         self.executor = executor
         self.tasks: list[Task] = []
@@ -574,7 +684,9 @@ class LiveScheduler:
             timeout: float = 600.0) -> SimReport:
         sess = SchedulerSession(self.executor or ThreadExecutor(), self.rm,
                                 policy=self.policy,
-                                speculative_factor=self.speculative_factor)
+                                speculative_factor=self.speculative_factor,
+                                placement=self.placement,
+                                work_stealing=self.work_stealing)
         rep = sess.run(descs, timeout=timeout)
         self.tasks = rep.tasks
         return rep

@@ -57,6 +57,8 @@ class Task:
     speculative_of: Optional[int] = None   # uid of the task this duplicates
     excluded_devices: set = dataclasses.field(default_factory=set)
     # devices prior attempts failed on; retries avoid them when possible
+    placement: str = ""              # policy that placed this task's devices
+    # (pack|spread; set by the scheduler at dispatch, recorded on the comm)
 
     @property
     def run_seconds(self) -> float:

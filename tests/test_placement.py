@@ -1,0 +1,229 @@
+"""Topology-aware placement layer: Topology reports, pack/spread policies,
+ResourceManager.allocate_placed, and the communicator fixes that ride along
+(sub() ValueError, _factor_shape degenerate-axis normalization)."""
+import pytest
+
+from repro.core import (
+    PACK, SPREAD, Communicator, ProcDevice, ProcessExecutor, ResourceManager,
+    SchedulerSession, SimOptions, TaskDescription, TaskState, ThreadExecutor,
+    Topology, VirtualClockExecutor,
+)
+from repro.core.communicator import _factor_shape, degenerate_axes
+from repro.core.placement import plan
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+def test_topology_nodes_and_grouping():
+    topo = Topology({"w0": [0, 1], "w1": [2, 3]})
+    assert topo.n_nodes == 2
+    assert topo.node_of(1) == "w0" and topo.node_of(3) == "w1"
+    assert topo.node_of("stranger") is None
+    groups = topo.group([3, 0, 2, 1])
+    assert groups == {"w1": [3, 2], "w0": [0, 1]}   # order kept within node
+
+
+def test_topology_unknown_devices_get_private_nodes():
+    """Pack must never co-locate devices the topology knows nothing about."""
+    topo = Topology({"w0": [0]})
+    groups = topo.group([0, "x", "y"])
+    assert groups["w0"] == [0]
+    assert [v for k, v in groups.items() if k != "w0"] == [["x"], ["y"]]
+
+
+# ---------------------------------------------------------------------------
+# plan: the policy itself
+# ---------------------------------------------------------------------------
+def test_plan_spread_is_legacy_flat_order_with_exclude_last():
+    free = [0, 1, 2, 3]
+    assert plan(2, free) == [0, 1]
+    assert plan(2, free, policy=SPREAD) == [0, 1]
+    # excluded devices are chosen only when nothing else fits
+    assert plan(3, free, policy=SPREAD, exclude={0, 1}) == [2, 3, 0]
+    # a topology does not change spread: it is the topology-blind baseline
+    topo = Topology({"w0": [0, 1], "w1": [2, 3]})
+    assert plan(2, free, topo, SPREAD) == [0, 1]
+
+
+def test_plan_pack_best_fit_single_node():
+    topo = Topology({"w0": [0, 1], "w1": [2, 3, 4]})
+    # n=2 fits both nodes; best fit = fewest free devices = w0
+    assert plan(2, [0, 1, 2, 3, 4], topo, PACK) == [0, 1]
+    # with w0 fragmented to one free device, only w1 fits n=2
+    assert plan(2, [1, 2, 3, 4], topo, PACK) == [2, 3]
+
+
+def test_plan_pack_spans_fewest_nodes_when_no_single_fit():
+    topo = Topology({"w0": [0], "w1": [1, 2], "w2": [3, 4, 5]})
+    # n=5: no node fits; fill from the largest-free nodes first -> w2 + w1
+    assert plan(5, [0, 1, 2, 3, 4, 5], topo, PACK) == [3, 4, 5, 1, 2]
+
+
+def test_plan_pack_prefers_clean_nodes_under_exclusion():
+    """A node with enough non-excluded devices beats a smaller node whose
+    free devices include ones a prior attempt failed on."""
+    topo = Topology({"w0": [0, 1], "w1": [2, 3, 4]})
+    got = plan(2, [0, 1, 2, 3, 4], topo, PACK, exclude={0, 1})
+    assert got == [2, 3]
+    # when every node is tainted, fall back to best fit anyway
+    assert plan(2, [0, 1, 2, 3, 4], topo, PACK,
+                exclude={0, 1, 2, 3, 4}) == [0, 1]
+
+
+def test_plan_pack_spanning_avoids_excluded_devices():
+    """A spanning allocation must taint as few devices as possible: with
+    node w0 fully excluded (e.g. a sick worker a prior attempt failed on),
+    the plan drains the clean node first and takes only the unavoidable
+    remainder from the tainted one — never leaving a clean device idle in
+    favour of a failed one."""
+    topo = Topology({"w0": [0, 1, 2], "w1": [3, 4]})
+    got = plan(4, [0, 1, 2, 3, 4], topo, PACK, exclude={0, 1, 2})
+    assert got == [3, 4, 0, 1]
+    # when the clean devices alone suffice, excluded ones are not touched
+    # at all, even if that costs one extra node
+    topo2 = Topology({"w0": [0, 1, 2], "w1": [3, 4], "w2": [5]})
+    got = plan(3, [0, 1, 2, 3, 4, 5], topo2, PACK, exclude={0, 1, 2})
+    assert got == [3, 4, 5]
+
+
+def test_plan_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown placement policy"):
+        plan(1, [0, 1], policy="nearest")
+
+
+# ---------------------------------------------------------------------------
+# ResourceManager.allocate_placed + the executor topology reports
+# ---------------------------------------------------------------------------
+def test_allocate_is_shim_over_allocate_placed():
+    a, b = ResourceManager(range(6)), ResourceManager(range(6))
+    assert a.allocate(3, exclude={0}) == b.allocate_placed(3, exclude={0})
+    assert a.n_free == b.n_free == 3
+
+
+def test_spread_free_list_evolution_matches_legacy_allocate():
+    """Bit-for-bit reproduction includes the free list's internal order:
+    the historical allocate() persisted its excluded-last reordering into
+    the remaining pool, so the NEXT allocation saw [3, 1], not [1, 3]."""
+    rm = ResourceManager([0, 1, 2, 3])
+    assert rm.allocate(2, exclude={1}) == (0, 2)
+    assert rm.allocate(2) == (3, 1)      # the reorder persisted
+
+
+def test_allocate_placed_pack_with_callable_topology():
+    rm = ResourceManager([ProcDevice("w0", 0), ProcDevice("w0", 1),
+                          ProcDevice("w1", 0), ProcDevice("w1", 1)])
+    ex = ProcessExecutor(n_workers=2)          # never started: topology() is
+    # pure classification by handle, no worker processes involved
+    blocker = rm.allocate_placed(1, topology=ex.topology, policy=PACK)
+    assert blocker == (ProcDevice("w0", 0),)
+    got = rm.allocate_placed(2, topology=ex.topology, policy=PACK)
+    assert got == (ProcDevice("w1", 0), ProcDevice("w1", 1))
+
+
+def test_thread_executor_topology_is_one_node():
+    topo = ThreadExecutor(build_comm=False).topology(["d0", "d1"])
+    assert topo.n_nodes == 1 and topo.node_of("d1") == "node0"
+
+
+def test_virtual_executor_synthetic_topology_is_stable_on_subsets():
+    ex = VirtualClockExecutor(SimOptions(devices_per_node=2))
+    full = ex.topology(range(6))
+    assert full.nodes == {"n0": (0, 1), "n1": (2, 3), "n2": (4, 5)}
+    # classifying a fragmented free list maps devices to the SAME nodes
+    sub = ex.topology([5, 1, 2])
+    assert sub.node_of(5) == "n2" and sub.node_of(1) == "n0"
+    # devices_per_node=0 (default) -> the historical one-flat-node view
+    assert VirtualClockExecutor(SimOptions()).topology([0, 1]).n_nodes == 1
+
+
+def test_pack_placement_end_to_end_on_virtual_nodes():
+    """Dispatch consults the placement layer: with dev 0 held by a blocker,
+    a 2-rank task under pack lands on node n1's devices (2, 3) instead of
+    straddling (1, 2) as the flat order would."""
+    opts = SimOptions(noise=0.0, overhead_model=lambda r: 0.0,
+                      devices_per_node=2)
+    sess = SchedulerSession(VirtualClockExecutor(opts),
+                            ResourceManager(range(4)), placement=PACK)
+    blk, two = sess.submit([
+        TaskDescription(name="blk", ranks=1, fn=None,
+                        duration_model=lambda r: 5.0,
+                        tags={"pipeline": "p"}),
+        TaskDescription(name="two", ranks=2, fn=None,
+                        duration_model=lambda r: 1.0,
+                        tags={"pipeline": "p"})])
+    assert blk.devices == (0,)
+    assert two.devices == (2, 3)
+    assert two.placement == PACK
+    rep = sess.drain().close()
+    assert all(t.state == TaskState.DONE for t in rep.tasks)
+
+
+def test_spread_placement_reproduces_flat_allocation():
+    """Same scenario under spread (the default): today's flat first-free
+    order, i.e. the 2-rank task straddles the synthetic nodes."""
+    opts = SimOptions(noise=0.0, overhead_model=lambda r: 0.0,
+                      devices_per_node=2)
+    sess = SchedulerSession(VirtualClockExecutor(opts),
+                            ResourceManager(range(4)))
+    _, two = sess.submit([
+        TaskDescription(name="blk", ranks=1, fn=None,
+                        duration_model=lambda r: 5.0,
+                        tags={"pipeline": "p"}),
+        TaskDescription(name="two", ranks=2, fn=None,
+                        duration_model=lambda r: 1.0,
+                        tags={"pipeline": "p"})])
+    assert two.devices == (1, 2)
+    sess.drain().close()
+
+
+def test_unknown_placement_rejected_at_session_start():
+    with pytest.raises(ValueError, match="unknown placement"):
+        SchedulerSession(VirtualClockExecutor(SimOptions()),
+                         ResourceManager(range(2)), placement="closest")
+
+
+def test_placement_recorded_on_live_communicator():
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01),
+                            ResourceManager(["d0"]), placement=PACK)
+    rep = sess.run([TaskDescription(name="t", ranks=1,
+                                    fn=lambda comm: comm.placement,
+                                    tags={"pipeline": "p"})], timeout=30)
+    assert rep.tasks[0].result == PACK
+
+
+# ---------------------------------------------------------------------------
+# communicator satellites: sub() errors, _factor_shape degeneracy
+# ---------------------------------------------------------------------------
+def _comm(axes, shape):
+    return Communicator(mesh=None, devices=tuple(range(sum(shape))),
+                        axes=axes, shape=shape, build_seconds=0.0)
+
+
+def test_sub_unknown_axis_raises_value_error_naming_axes():
+    comm = _comm(("df", "mp"), (4, 2))
+    assert comm.sub("df") == 4 and comm.sub("mp") == 2
+    with pytest.raises(ValueError, match=r"'tp'.*\('df', 'mp'\)"):
+        comm.sub("tp")
+
+
+def test_factor_shape_normalizes_largest_first():
+    assert _factor_shape(12, 1) == (12,)
+    assert _factor_shape(12, 2) == (4, 3)
+    assert _factor_shape(12, 3) == (3, 2, 2)
+
+
+def test_factor_shape_prime_is_detectably_degenerate():
+    """Prime n cannot fill 2 axes: the size-1 axis now TRAILS ((n, 1), never
+    (1, n)) and degenerate_axes flags it so callers can react instead of
+    silently partitioning work along a no-op axis."""
+    assert _factor_shape(7, 2) == (7, 1)
+    assert degenerate_axes((7, 1)) == (1,)
+    assert degenerate_axes((4, 3)) == ()
+    # a genuinely single-rank mesh has no usable parallelism anywhere;
+    # nothing to flag
+    assert _factor_shape(1, 2) == (1, 1)
+    assert degenerate_axes((1, 1)) == ()
+    assert degenerate_axes((1,)) == ()
+    comm = _comm(("df", "mp"), (7, 1))
+    assert comm.degenerate_axes == ("mp",)

@@ -311,6 +311,57 @@ def test_partial_failure_holds_devices_until_sibling_part_finishes():
         assert t_disp["waiter"] >= t_fail - 0.05
 
 
+def _hold(comm, dur=0.8):
+    time.sleep(dur)
+    return "held"
+
+
+def _placement_probe(comm, n_coll=4):
+    for _ in range(n_coll):
+        comm.allgather(comm.local_size)
+    comm.bcast("x")
+    comm.barrier()
+    return {"n_parts": comm.n_parts, "hub_calls": comm.hub_calls,
+            "local_size": comm.local_size, "placement": comm.placement,
+            "devices": tuple(map(str, comm.devices))}
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_pack_places_fitting_task_on_one_worker():
+    """Acceptance: with w0 fragmented by a 1-rank blocker, a 2-rank task
+    under ``pack`` is placed on exactly ONE worker — a single part whose
+    collectives complete locally (zero hub round-trips) — while ``spread``
+    reproduces today's flat order and straddles both workers, paying the
+    parent hub for every collective."""
+    results = {}
+    for placement in ("spread", "pack"):
+        with ProcessExecutor(n_workers=2, devices_per_worker=2,
+                             build_comm=False, heartbeat_interval=0.2,
+                             tick=0.02) as ex:
+            sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02,
+                                    placement=placement)
+            rep = sess.run(
+                [TaskDescription(name="hold", ranks=1, fn=_hold,
+                                 tags={"pipeline": "p"}),
+                 TaskDescription(name="probe", ranks=2, fn=_placement_probe,
+                                 tags={"pipeline": "p"})], timeout=120)
+            assert all(t.state == TaskState.DONE for t in rep.tasks)
+            by = {t.desc.name: t for t in rep.tasks}
+            results[placement] = by["probe"].result
+    spread, pack = results["spread"], results["pack"]
+    # spread = the historical behaviour: the task spans workers and every
+    # collective (4 allgathers + bcast + barrier) is a hub round-trip
+    assert spread["n_parts"] == 2 and spread["local_size"] == 1
+    assert spread["hub_calls"] == 6
+    # pack: the worker-part spec is a single part on a single worker, and
+    # the SAME payload never touches the hub
+    assert pack["n_parts"] == 1 and pack["local_size"] == 2
+    assert pack["hub_calls"] == 0
+    assert pack["placement"] == "pack"
+    assert len({d.split(":")[0] for d in pack["devices"]}) == 1
+
+
 def _psum_local(comm):
     import jax
     import jax.numpy as jnp

@@ -10,8 +10,9 @@ import pytest
 
 from repro.core import (
     BATCH, HETEROGENEOUS, InsufficientResources, Pipeline, ProcessExecutor,
-    ResourceManager, SchedulerSession, SimOptions, TaskDescription, TaskState,
-    ThreadExecutor, VirtualClockExecutor, run_pipelines, simulate,
+    ResourceManager, SchedulerSession, SimOptions, Task, TaskDescription,
+    TaskState, ThreadExecutor, VirtualClockExecutor, interleave_by_pipeline,
+    run_pipelines, simulate,
 )
 from repro.core.executors import serialize
 
@@ -332,6 +333,186 @@ def test_trace_skeleton_identical_virtual_thread_process():
     spans = [t for t in rep_proc.tasks if t.desc.ranks == 4]
     assert spans and all(
         len({d.worker for d in t.devices}) == 2 for t in spans)
+
+
+def _mk_task(name, pipe, priority=0):
+    return Task(desc=TaskDescription(name=name, ranks=1, fn=None,
+                                     priority=priority,
+                                     tags={"pipeline": pipe}))
+
+
+def test_interleave_by_pipeline_round_robins_fairly():
+    """Ordering is load-bearing for fairness: one pipeline's backlog must
+    not monopolize the head of the queue.  Round-robin across pipelines,
+    stable (submission order) within each pipeline."""
+    tasks = [_mk_task("p0", "P"), _mk_task("p1", "P"), _mk_task("p2", "P"),
+             _mk_task("q0", "Q"), _mk_task("q1", "Q")]
+    out = [t.desc.name for t in interleave_by_pipeline(tasks)]
+    assert out == ["p0", "q0", "p1", "q1", "p2"]
+
+
+def test_interleave_by_pipeline_priority_dominates_round_robin():
+    """Priority sorts above the round-robin (stable within a priority
+    level), so an urgent task jumps every pipeline's queue."""
+    tasks = [_mk_task("p0", "P"), _mk_task("p1", "P"),
+             _mk_task("q0", "Q"), _mk_task("q1", "Q", priority=1)]
+    out = [t.desc.name for t in interleave_by_pipeline(tasks)]
+    assert out == ["q1", "p0", "q0", "p1"]
+    # untagged tasks group under the "default" pipeline, not crash
+    assert len(interleave_by_pipeline([Task(desc=TaskDescription(
+        name="bare", ranks=1, fn=None))])) == 1
+
+
+def test_interleave_by_pipeline_empty_and_single_group():
+    assert interleave_by_pipeline([]) == []
+    tasks = [_mk_task(f"t{i}", "solo") for i in range(3)]
+    assert [t.desc.name for t in interleave_by_pipeline(tasks)] == \
+        ["t0", "t1", "t2"]
+
+
+def test_wait_any_timeout_not_enforced_on_virtual_clock():
+    """Scheduler timeouts are liveness guards against wall-clock hangs; the
+    virtual clock drains deterministically, so a tiny ``timeout`` must be
+    IGNORED — wait_any advances the clock to the next completion instead of
+    returning empty, and drain finishes tasks lasting far past the budget."""
+    sess = SchedulerSession(VirtualClockExecutor(SimOptions(noise=0.0)),
+                            ResourceManager([0]))
+    sess.submit([TaskDescription(name=f"t{i}", ranks=1, fn=None,
+                                 duration_model=lambda r: 1000.0,
+                                 tags={"pipeline": "p"}) for i in range(2)])
+    got = sess.wait_any(timeout=1e-9)
+    assert len(got) == 1 and got[0].state == TaskState.DONE
+    rep = sess.drain(timeout=1e-9).close()
+    assert all(t.state == TaskState.DONE for t in rep.tasks)
+    assert rep.makespan > 2000.0     # two serialized 1000s tasks completed
+
+
+# ---------------------------------------------------------------------------
+# work-stealing: elastic BATCH partitions
+# ---------------------------------------------------------------------------
+def test_work_stealing_strictly_reduces_batch_makespan_sim():
+    """Pipeline A is backlogged (6 tasks over its 2-device partition) while
+    pipeline B goes idle after 1s.  Static BATCH leaves B's devices idle
+    (makespan 6); with work-stealing A leases them and finishes in 4."""
+    def descs():
+        out = [TaskDescription(name=f"a{i}", ranks=1, fn=None,
+                               duration_model=lambda r: 2.0,
+                               tags={"pipeline": "A"}) for i in range(6)]
+        out.append(TaskDescription(name="b0", ranks=1, fn=None,
+                                   duration_model=lambda r: 1.0,
+                                   tags={"pipeline": "B"}))
+        return out
+
+    import dataclasses
+    base = SimOptions(policy=BATCH, noise=0.0, overhead_model=lambda r: 0.0)
+    static = simulate(descs(), 4, base)
+    steal = simulate(descs(), 4, dataclasses.replace(base,
+                                                     work_stealing=True))
+    assert all(t.state == TaskState.DONE for t in static.tasks)
+    assert all(t.state == TaskState.DONE for t in steal.tasks)
+    assert static.makespan == pytest.approx(6.0)
+    assert steal.makespan == pytest.approx(4.0)
+    assert steal.makespan < static.makespan          # strictly better
+    # evidence in the trace: leases taken and handed back, none under static
+    assert len(steal.events("steal")) == len(steal.events("return")) == 2
+    assert not static.events("steal") and not static.events("return")
+
+
+_STEAL_SPECS = [("a0", "A", 6.0), ("a1", "A", 3.0), ("a2", "A", 1.0),
+                ("b0", "B", 1.0)]
+# deterministic steal scenario on 2 devices (one per BATCH partition):
+#   t=1 b0 done -> B idle, A backlogged -> a1 leases B's device (steal)
+#   t=4 a1 done (return) -> a2 leases it again (steal)
+#   t=5 a2 done (return); t=6 a0 done.  No event ties at any scale.
+
+
+def _steal_session(executor, devices):
+    return SchedulerSession(executor, ResourceManager(devices), policy=BATCH,
+                            work_stealing=True)
+
+
+def _steal_key_trace(report):
+    return _key_trace(report,
+                      kinds=("submit", "dispatch", "done", "steal", "return"))
+
+
+def test_steal_return_trace_equivalence_sim_thread():
+    """The steal/return lifecycle must produce the identical event skeleton
+    on the virtual clock and on real threads — stealing lives in the core,
+    not in any executor."""
+    sim = _steal_session(
+        VirtualClockExecutor(SimOptions(noise=0.0,
+                                        overhead_model=lambda r: 0.0)),
+        [0, 1])
+    rep_sim = sim.run(_sim_descs(_STEAL_SPECS))
+
+    live = _steal_session(ThreadExecutor(build_comm=False, tick=0.01),
+                          ["d0", "d1"])
+    rep_thr = live.run(_live_descs(_STEAL_SPECS, sleep_scale=0.2),
+                       timeout=60)
+
+    assert all(t.state == TaskState.DONE for t in rep_sim.tasks)
+    assert all(t.state == TaskState.DONE for t in rep_thr.tasks)
+    assert _steal_key_trace(rep_sim) == _steal_key_trace(rep_thr)
+    assert [e.task for e in rep_sim.events("steal")] == ["a1", "a2"]
+    assert [e.task for e in rep_sim.events("return")] == ["a1", "a2"]
+
+
+def test_leased_device_dying_mid_lease_not_counted_as_returned():
+    """A leased device that fails while on loan leaves the lender's
+    inventory through its device_failure accounting; the thief's ``return``
+    event must count only devices actually handed back, or a trace consumer
+    balancing steal/return/device_failure double-counts the dead device."""
+    sess = _steal_session(
+        VirtualClockExecutor(SimOptions(noise=0.0,
+                                        overhead_model=lambda r: 0.0)),
+        [0, 1])
+    sess.submit(_sim_descs([("a0", "A", 5.0), ("a1", "A", 3.0),
+                            ("b0", "B", 1.0)]))
+    done = sess.wait_any()                      # b0 at t=1; a1 then leases
+    assert [t.desc.name for t in done] == ["b0"]
+    assert [e.kind for e in sess.trace].count("steal") == 1
+    sess._pools["B"].fail_devices([1])          # the leased device dies
+    rep = sess.drain().close()
+    assert all(t.state == TaskState.DONE for t in rep.tasks)
+    ret = rep.events("return")
+    assert len(ret) == 1 and ret[0].value == 0.0   # nothing came back alive
+    assert rep.events("steal")[0].value == 1.0
+
+
+def _steal_sleep(comm, dur, scale=0.2):
+    time.sleep(dur * scale)
+    return dur
+
+
+@pytest.mark.integration
+@pytest.mark.skipif(not serialize.HAVE_CLOUDPICKLE,
+                    reason="cloudpickle needed to ship test-local payloads")
+def test_steal_return_trace_equivalence_includes_process_executor():
+    """Same steal scenario through ProcessExecutor: a partition leases a
+    device owned by ANOTHER worker process and the skeleton still matches
+    the virtual clock's."""
+    sim = _steal_session(
+        VirtualClockExecutor(SimOptions(noise=0.0,
+                                        overhead_model=lambda r: 0.0)),
+        [0, 1])
+    rep_sim = sim.run(_sim_descs(_STEAL_SPECS))
+
+    with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                         build_comm=False, heartbeat_interval=0.2,
+                         tick=0.01) as ex:
+        sess = _steal_session(ex, list(ex.devices()))
+        rep_proc = sess.run(
+            [TaskDescription(name=n, ranks=1, fn=_steal_sleep, args=(dur,),
+                             tags={"pipeline": pipe})
+             for n, pipe, dur in _STEAL_SPECS], timeout=120)
+
+    assert all(t.state == TaskState.DONE for t in rep_proc.tasks)
+    assert _steal_key_trace(rep_sim) == _steal_key_trace(rep_proc)
+    # the lease really crossed worker processes: a1 ran on B's worker
+    by = {t.desc.name: t for t in rep_proc.tasks}
+    assert {d.worker for d in by["a0"].devices} != \
+        {d.worker for d in by["a1"].devices}
 
 
 def test_same_core_reports_device_failure_trace():
