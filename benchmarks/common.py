@@ -60,4 +60,10 @@ def trace_summary(report) -> dict:
         "mean_wait_s": sum(waits) / len(waits) if waits else 0.0,
         "comm_build_total_s": sum(comm),
         "comm_build_mean_s": sum(comm) / len(comm) if comm else 0.0,
+        # data-plane evidence, uniform across backends: the process executor
+        # reports real worker-to-worker bytes / hub round-trips; thread and
+        # virtual runs report plain zeros (never a KeyError downstream)
+        "p2p_bytes": sum(getattr(e, "p2p", 0.0)
+                         for e in report.trace if e.kind in ("done", "fail")),
+        "hub_calls": sum(getattr(t, "hub_calls", 0) for t in report.tasks),
     }

@@ -25,6 +25,11 @@ class Communicator:
     uid: str = ""
     placement: str = ""           # policy that placed the devices (pack|
     # spread; "" when allocation bypassed the scheduler's placement layer)
+    # comm-stats surface, uniform across backends: an in-process mesh has no
+    # cross-process data plane, so both are constants here — ProcTaskComm
+    # reports the real counters under the same names
+    p2p_bytes: int = 0            # bytes moved worker-to-worker
+    hub_calls: int = 0            # parent-hub round-trips paid
 
     @property
     def size(self) -> int:

@@ -28,6 +28,10 @@ class ExecEvent:
     result: Any = None
     error: Optional[str] = None
     comm_build_s: float = 0.0
+    p2p_bytes: int = 0             # bytes the task's collectives moved
+    # worker-to-worker (process executor's peer data plane; identically 0
+    # on the in-process and virtual backends — uniform trace evidence)
+    hub_calls: int = 0             # parent-hub round-trips the task paid
     n_devices: int = 0             # device_failure payload
     devices: tuple = ()            # device_failure: the EXACT devices lost
     # (empty -> the core shrinks the pool by n_devices arbitrary free

@@ -11,8 +11,20 @@ Task payloads are shipped as cloudpickle bytes over a length-prefixed socket
 protocol (``protocol.py``).  A task whose ranks span several workers is split
 into one *part* per worker; each part gets a :class:`ProcTaskComm` whose
 local sub-mesh covers that worker's share and whose ``allgather``/``bcast``/
-``barrier`` run through the hub here — the paper's heterogeneous communicator
-across nodes.  The task's result is part 0's (global rank 0) return value.
+``barrier`` coordinate through the hub here — the paper's heterogeneous
+communicator across nodes.  The task's result is part 0's (global rank 0)
+return value.
+
+Data plane vs control plane: each worker opens a peer-data listener and
+advertises it in its HELLO; the parent ships the full address book (part ->
+worker host:port) in every spanning LAUNCH, and collective payloads above
+``p2p_threshold`` then move DIRECTLY between peer workers — the hub keeps
+only the small per-collective control/barrier frame (and automatically
+carries the payload again whenever a peer channel cannot be used, or when
+``p2p=False`` / ``REPRO_P2P=0`` disables the plane).  ``hub_calls`` /
+``hub_relay_bytes`` / ``p2p_bytes`` on the executor are the running
+evidence.  Multi-HOST workers need nothing more than this address book —
+the protocol is already plain TCP.
 
 Liveness is real, not injected: workers heartbeat; an EOF/reset on a worker
 channel or a stale heartbeat marks the worker lost, which surfaces as ONE
@@ -63,6 +75,9 @@ class _WorkerHandle:
         self.chan: Optional[Channel] = None
         self.alive = False
         self.last_hb = _time.monotonic()
+        self.data_addr: Optional[tuple] = None   # (host, port) of the
+        # worker's peer-data listener, from its HELLO; None when the peer
+        # plane is disabled — the parent's address book entries
 
     def log_tail(self, n: int = 2000) -> str:
         try:
@@ -102,6 +117,9 @@ class _Tracker:
         self.error: Optional[str] = None          # first part error wins
         self.comm_build_s = 0.0
         self.delivered = False
+        self.p2p_bytes = 0                        # summed over parts: bytes
+        self.hub_calls = 0                        # moved peer-to-peer / hub
+        # round-trips paid — the comm-stats evidence on the terminal event
 
 
 class ProcessExecutor(QueueEventExecutor):
@@ -129,7 +147,9 @@ class ProcessExecutor(QueueEventExecutor):
                  start_timeout: float = 120.0,
                  python: str = sys.executable,
                  env: Optional[dict] = None,
-                 extra_pythonpath: Sequence[str] = ()):
+                 extra_pythonpath: Sequence[str] = (),
+                 p2p: Optional[bool] = None,
+                 p2p_threshold: int = 1024):
         super().__init__()
         if isinstance(devices_per_worker, int):
             devices_per_worker = [devices_per_worker] * n_workers
@@ -142,6 +162,16 @@ class ProcessExecutor(QueueEventExecutor):
         self.python = python
         self.env_override = dict(env or {})
         self.extra_pythonpath = list(extra_pythonpath)
+        # peer data plane: None -> on unless REPRO_P2P=0 (the CI matrix
+        # flips the env var to exercise the hub-relay fallback end to end)
+        self.p2p = (os.environ.get("REPRO_P2P", "1") != "0") \
+            if p2p is None else p2p
+        self.p2p_threshold = p2p_threshold
+        self.hub_calls = 0      # COLL round-trips served by this hub
+        self.hub_relay_bytes = 0   # real payload bytes the hub relayed
+        # (peer-mode collectives contribute only the tiny PEER_SENT marker)
+        self.p2p_bytes = 0      # bytes moved worker-to-worker, summed from
+        # the workers' PART_DONE accounting (the hub never sees these bytes)
         self._counts = list(devices_per_worker)
         self.workers: dict[str, _WorkerHandle] = {}
         self._running: dict[int, _Tracker] = {}
@@ -193,7 +223,8 @@ class ProcessExecutor(QueueEventExecutor):
                     [self.python, "-m", "repro.core.executors.worker",
                      "--addr", f"127.0.0.1:{port}", "--worker", wid,
                      "--n-devices", str(k),
-                     "--heartbeat", str(self.hb_interval), "--token", token],
+                     "--heartbeat", str(self.hb_interval), "--token", token,
+                     "--p2p", "1" if self.p2p else "0"],
                     env=self._worker_env(k), stdout=logf,
                     stderr=subprocess.STDOUT)
             self.workers[wid] = _WorkerHandle(wid, proc, k, log)
@@ -235,6 +266,9 @@ class ProcessExecutor(QueueEventExecutor):
             sock.settimeout(None)
             wh = self.workers[d["worker"]]
             wh.chan, wh.alive = chan, True
+            if d.get("data_port"):
+                wh.data_addr = (d.get("data_host") or "127.0.0.1",
+                                d["data_port"])
             wh.last_hb = _time.monotonic()
             # byte progress counts as liveness: heartbeats queue behind any
             # large in-flight frame on the same stream
@@ -355,6 +389,16 @@ class ProcessExecutor(QueueEventExecutor):
         except Exception as e:  # noqa: BLE001 — unserializable payload
             self._fail_all_parts(tracker, f"{type(e).__name__}: {e}")
             return
+        # the address book: every part's worker identity + peer-data address,
+        # shipped with every spanning LAUNCH so large collective payloads can
+        # move worker-to-worker (a None entry downgrades the whole task to
+        # hub relay — the sentinel contract needs every part reachable)
+        peer_addrs = None
+        if self.p2p and tracker.n_parts > 1:
+            peer_addrs = [
+                (w, *self.workers[w].data_addr)
+                if self.workers[w].data_addr else None
+                for w in part_workers]
         for idx, wid in enumerate(part_workers):
             p = parts[wid]
             try:
@@ -368,7 +412,9 @@ class ProcessExecutor(QueueEventExecutor):
                     mesh_axes=task.desc.mesh_axes,
                     mesh_shape=task.desc.mesh_shape,
                     build_comm=self.build_comm,
-                    placement=task.placement)
+                    placement=task.placement,
+                    peer_addrs=peer_addrs,
+                    p2p_threshold=self.p2p_threshold)
             except ConnectionClosed:
                 # this part (and the never-launched rest) can't run; parts
                 # already launched on other workers complete the tracker
@@ -449,7 +495,8 @@ class ProcessExecutor(QueueEventExecutor):
 
     def _part_terminal(self, tracker: _Tracker, part: int,
                        error: Optional[str] = None, result=None,
-                       comm_s: float = 0.0):
+                       comm_s: float = 0.0, p2p_bytes: int = 0,
+                       hub_calls: int = 0):
         """Record one part's fate; the task's single terminal ExecEvent is
         delivered only when EVERY part is accounted for (result, error, or
         hosted on a dead worker)."""
@@ -459,6 +506,9 @@ class ProcessExecutor(QueueEventExecutor):
             tracker.remaining.discard(part)
             tracker.results[part] = result
             tracker.comm_build_s = max(tracker.comm_build_s, comm_s)
+            tracker.p2p_bytes += p2p_bytes
+            tracker.hub_calls += hub_calls
+            self.p2p_bytes += p2p_bytes
             first_error = error is not None and tracker.error is None
             if first_error:
                 tracker.error = error
@@ -475,14 +525,18 @@ class ProcessExecutor(QueueEventExecutor):
         if tracker.error is not None:
             self._q.put(ExecEvent("fail", task=tracker.task,
                                   error=tracker.error,
-                                  comm_build_s=tracker.comm_build_s))
+                                  comm_build_s=tracker.comm_build_s,
+                                  p2p_bytes=tracker.p2p_bytes,
+                                  hub_calls=tracker.hub_calls))
         else:
             # results stay as bytes until poll(): deserializing a large
             # result here would stall this reader thread past hb_timeout
             # and get a healthy worker killed as hung
             self._q.put(ExecEvent("done", task=tracker.task,
                                   result=_RawResult(tracker.results[0]),
-                                  comm_build_s=tracker.comm_build_s))
+                                  comm_build_s=tracker.comm_build_s,
+                                  p2p_bytes=tracker.p2p_bytes,
+                                  hub_calls=tracker.hub_calls))
 
     def _fail_all_parts(self, tracker: _Tracker, error: str):
         """Abort a launch that never (fully) reached the workers."""
@@ -496,11 +550,18 @@ class ProcessExecutor(QueueEventExecutor):
             return       # stale: task already failed/cancelled, or this part
             # belongs to a previous attempt of a retried task (same uid)
         self._part_terminal(tracker, d["part"], error=d["error"],
-                            result=d["result"], comm_s=d["comm_build_s"])
+                            result=d["result"], comm_s=d["comm_build_s"],
+                            p2p_bytes=d.get("p2p_bytes", 0),
+                            hub_calls=d.get("hub_calls", 0))
 
     def _coll_contribution(self, sender: _WorkerHandle, d: dict):
         uid, attempt, seq = d["uid"], d["attempt"], d["seq"]
         with self._lock:
+            # counter updates stay under the lock: += from concurrent
+            # per-worker reader threads would drop updates
+            self.hub_calls += 1
+            if d["payload"] != protocol.PEER_SENT:
+                self.hub_relay_bytes += len(d["payload"])
             tracker = self._running.get(uid)
             if tracker is None or tracker.delivered or \
                     tracker.attempt != attempt:

@@ -13,20 +13,34 @@ task's uid across retries, and the attempt id keeps stale frames from a
 failed attempt out of its successor.
 
 worker -> parent:
-  HELLO      {worker, pid, n_devices, platform}        registration
+  HELLO      {worker, pid, n_devices, platform,
+              data_host, data_port}                    registration; the
+              data address is the worker's peer-data listener (None when
+              the peer plane is disabled) — the parent's address book
   HEARTBEAT  {worker, t}                               liveness
   PART_DONE  {uid, attempt, part, result: bytes|None, error: str|None,
-              comm_build_s}                            one part finished
+              comm_build_s, p2p_bytes, hub_calls,
+              p2p_fallbacks}                           one part finished
   COLL       {uid, attempt, seq, part, payload: bytes} collective contribution
 
 parent -> worker:
   LAUNCH     {uid, attempt, name, part, n_parts, local_devices: [int],
               global_ranks: [int], world_size, payload: bytes,
-              mesh_axes, mesh_shape, build_comm}       run one task part
+              mesh_axes, mesh_shape, build_comm,
+              peer_addrs: [(worker, host, port)|None],
+              p2p_threshold}                           run one task part;
+              peer_addrs is the full address book of the task's parts so
+              large collective payloads can move worker-to-worker
   COLL_RESULT {uid, attempt, seq, values: [bytes]}     gathered contributions
   COLL_ERROR {uid, attempt, seq|None, error}           participant died
   CANCEL     {uid, attempt}                            cooperative abort
   SHUTDOWN   {}                                        clean exit
+
+worker -> worker (peer data plane, same framing on the data port):
+  PEER_HELLO {worker, token}                           authenticate channel
+  PEER_DATA  {uid, attempt, seq, part, payload: bytes} one part's collective
+              payload, shipped directly to a peer — the hub sees only the
+              PEER_SENT placeholder for it
 """
 from __future__ import annotations
 
@@ -44,6 +58,14 @@ COLL_RESULT = "coll_result"
 COLL_ERROR = "coll_error"
 CANCEL = "cancel"
 SHUTDOWN = "shutdown"
+PEER_HELLO = "peer_hello"
+PEER_DATA = "peer_data"
+
+#: Placeholder a part sends the hub instead of its payload when the payload
+#: already went worker-to-worker over the peer data plane.  Real payloads are
+#: ``serialize.dumps`` output — a pickle stream, which always opens with the
+#: b"\x80" PROTO opcode — so a value starting with b"\x00" can never collide.
+PEER_SENT = b"\x00p2p\x00"
 
 _LEN = struct.Struct(">I")
 MAX_FRAME = 1 << 31   # 2 GiB sanity cap

@@ -18,6 +18,8 @@ class StubComm:
     mesh: Any = None
     build_seconds: float = 0.0
     placement: str = ""          # policy that placed the devices (pack|spread)
+    p2p_bytes: int = 0           # uniform comm-stats surface: an in-process
+    hub_calls: int = 0           # comm never pays a hub or peer transfer
 
     @property
     def size(self) -> int:

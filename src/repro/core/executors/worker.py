@@ -6,10 +6,13 @@ so it owns K host devices.  The worker
 
 * dials back to the parent, registers its device inventory (HELLO),
 * sends HEARTBEAT frames so the scheduler gets real liveness detection,
+* opens a peer-data listener (:class:`_PeerNet`) whose address is advertised
+  in the HELLO frame — large collective payloads move worker-to-worker over
+  persistent peer channels instead of relaying through the parent hub,
 * runs each LAUNCH frame's task *part* in its own thread: builds the local
   sub-mesh communicator, wraps it in a :class:`ProcTaskComm` (which adds
-  cross-process collectives via the parent's hub), calls the payload, and
-  ships the serialized result back (PART_DONE).
+  cross-process collectives via the peer data plane + parent's hub), calls
+  the payload, and ships the serialized result back (PART_DONE).
 
 Run as ``python -m repro.core.executors.worker --addr HOST:PORT ...``.
 """
@@ -86,6 +89,175 @@ class _Hub:
         with self._lock:
             self._dead.pop((uid, attempt), None)
 
+    def dead_error(self, uid: int, attempt: int) -> Optional[str]:
+        """The abort reason for (uid, attempt), or None while it is live —
+        polled by peer-data waits so a COLL_ERROR unblocks them too."""
+        with self._lock:
+            return self._dead.get((uid, attempt))
+
+
+class _PeerNet:
+    """Worker-to-worker data plane: one listening data port per worker plus
+    a cache of persistent outgoing channels, moving collective payloads
+    directly between peers (the length-prefixed ``protocol.py`` framing, the
+    parent hub never sees the bytes).
+
+    * inbound: every accepted connection authenticates with PEER_HELLO
+      (shared pilot token), then streams PEER_DATA frames into the mailbox,
+      keyed ``(uid, attempt, seq, src_part)`` — stale frames of a failed
+      attempt can never be matched by its retry (different attempt id).
+    * outbound: ``send`` reuses one cached channel per destination worker;
+      a send failure drops the cached channel and retries once on a fresh
+      connection, then reports failure so the caller can fall back to the
+      hub relay — a dead peer never wedges a collective.
+    """
+
+    #: purged-attempt tombstones kept (FIFO); bounds the memory a late frame
+    #: race can cost while covering far more history than can be in flight
+    MAX_TOMBSTONES = 4096
+
+    def __init__(self, worker_id: str, token: str):
+        self.worker_id = worker_id
+        self.token = token
+        self.data_addr: Optional[tuple] = None    # (host, port) advertised
+        self._cv = threading.Condition()
+        self._mail: dict = {}                     # key -> payload bytes
+        self._done: dict = {}                     # (uid, attempt) tombstones
+        # of purged attempts (insertion-ordered): peer and hub channels have
+        # no mutual ordering, so a frame may arrive AFTER its attempt ended
+        # — without the tombstone it would park in the mailbox forever
+        self._out: dict = {}                      # dest worker id -> Channel
+        self._out_lock = threading.Lock()
+        self._server: Optional[socket.socket] = None
+
+    # --- inbound ----------------------------------------------------------
+    def start(self, advertise_host: str):
+        """Open the data port (any interface — multi-host workers need only
+        a routable address book) and advertise ``advertise_host``: the local
+        address of the parent channel, i.e. the interface peers on other
+        hosts can reach the same way the parent does."""
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind(("", 0))
+        srv.listen(64)
+        self._server = srv
+        self.data_addr = (advertise_host, srv.getsockname()[1])
+        threading.Thread(target=self._accept_loop, daemon=True).start()
+
+    def _accept_loop(self):
+        while True:
+            try:
+                sock, _ = self._server.accept()
+            except OSError:
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            sock.settimeout(10.0)     # bound the PEER_HELLO handshake
+            threading.Thread(target=self._serve, args=(Channel(sock),),
+                             daemon=True).start()
+
+    def _serve(self, chan: Channel):
+        try:
+            kind, d = chan.recv()
+            if kind != protocol.PEER_HELLO or d.get("token") != self.token:
+                chan.close()
+                return
+            chan.sock.settimeout(None)
+            while True:
+                kind, d = chan.recv()
+                if kind == protocol.PEER_DATA:
+                    self.put((d["uid"], d["attempt"], d["seq"], d["part"]),
+                             d["payload"])
+        except (ConnectionClosed, OSError):
+            chan.close()
+
+    # --- mailbox ----------------------------------------------------------
+    def put(self, key: tuple, payload: bytes):
+        with self._cv:
+            if key[:2] in self._done:
+                return                # attempt already ended: unclaimable
+            self._mail[key] = payload
+            self._cv.notify_all()
+
+    def take(self, key: tuple, timeout: float, abort=None) -> bytes:
+        """Blocking receive of one peer payload.  ``abort()`` (if given)
+        returns an error string once the task is being torn down — a worker
+        dying mid-transfer surfaces as the parent's COLL_ERROR/CANCEL, which
+        must unblock this wait promptly instead of running out the clock."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if key in self._mail:
+                    return self._mail.pop(key)
+                if abort is not None:
+                    err = abort()
+                    if err:
+                        raise CollectiveError(err)
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    raise CollectiveError(
+                        f"peer payload {key} not received within {timeout}s")
+                self._cv.wait(min(left, 0.05))
+
+    def purge(self, uid: int, attempt: int):
+        """Drop parked payloads of a finished/aborted attempt — they can
+        never be claimed (keys carry the attempt id) and would otherwise
+        accumulate for the worker's life.  The attempt is tombstoned so a
+        frame still in flight on a peer channel is dropped on arrival."""
+        with self._cv:
+            for k in [k for k in self._mail
+                      if k[0] == uid and k[1] == attempt]:
+                del self._mail[k]
+            self._done[(uid, attempt)] = None
+            while len(self._done) > self.MAX_TOMBSTONES:
+                del self._done[next(iter(self._done))]
+
+    # --- outbound ---------------------------------------------------------
+    def _channel(self, wid: str, addr: tuple,
+                 fresh: bool = False) -> Optional[Channel]:
+        if not fresh:
+            with self._out_lock:
+                chan = self._out.get(wid)
+            if chan is not None:
+                return chan
+        try:
+            sock = socket.create_connection(addr, timeout=5.0)
+        except OSError:
+            return None
+        sock.settimeout(None)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        chan = Channel(sock)
+        try:
+            chan.send(protocol.PEER_HELLO, worker=self.worker_id,
+                      token=self.token)
+        except ConnectionClosed:
+            chan.close()
+            return None
+        with self._out_lock:
+            old = self._out.get(wid)
+            self._out[wid] = chan
+        if old is not None and old is not chan:
+            old.close()
+        return chan
+
+    def send(self, wid: str, addr: tuple, **fields) -> bool:
+        """Ship one PEER_DATA frame to worker ``wid``; True on success.  A
+        stale cached channel (peer restarted its end, half-closed socket) is
+        dropped and retried ONCE on a fresh connection — never reused for
+        the caller's retry attempt."""
+        for fresh in (False, True):
+            chan = self._channel(wid, addr, fresh=fresh)
+            if chan is None:
+                continue
+            try:
+                chan.send(protocol.PEER_DATA, **fields)
+                return True
+            except ConnectionClosed:
+                with self._out_lock:
+                    if self._out.get(wid) is chan:
+                        del self._out[wid]
+                chan.close()
+        return False
+
 
 class ProcTaskComm:
     """The communicator a payload receives under :class:`ProcessExecutor`.
@@ -97,13 +269,27 @@ class ProcTaskComm:
     process owns, and ``allgather``/``bcast``/``barrier`` coordinate all
     parts through the pilot's hub.  Payloads written for ``ThreadExecutor``
     keep working unchanged as long as the task fits one worker (then
-    ``size == local_size`` and ``mesh`` covers every rank)."""
+    ``size == local_size`` and ``mesh`` covers every rank).
+
+    Data plane: when the LAUNCH frame carried a complete peer address book
+    (``peer_addrs``), a collective payload larger than ``p2p_threshold``
+    moves DIRECTLY to every peer worker over persistent peer channels; the
+    hub round-trip still happens per collective, but carries only the tiny
+    ``PEER_SENT`` placeholder — it is the ordering/barrier control frame,
+    not a data relay.  Payloads at or under the threshold (barrier tokens,
+    bcast Nones, small scalars) stay inline on the hub frame.  If any peer
+    send fails, THIS part's payload falls back to the hub frame for that
+    collective (``p2p_fallbacks``) and every receiver still completes —
+    receivers decide per hub value whether to read it inline or await the
+    peer copy, so mixed outcomes cannot deadlock."""
 
     def __init__(self, uid: int, world_size: int, global_ranks: tuple,
                  part: int, n_parts: int, local_comm, hub: _Hub,
                  attempt: int = 0, coll_timeout: float = 120.0,
                  cancelled: Optional[threading.Event] = None,
-                 placement: str = ""):
+                 placement: str = "", peer_net: Optional[_PeerNet] = None,
+                 peer_addrs: Optional[list] = None,
+                 p2p_threshold: int = 1024):
         self.uid = uid
         self.attempt = attempt
         self.world_size = world_size
@@ -116,9 +302,23 @@ class ProcTaskComm:
         # spread); under pack a fitting task has n_parts == 1 and its
         # collectives below never touch the hub
         self.hub_calls = 0           # parent-hub round-trips actually paid
+        self.p2p_bytes = 0           # payload bytes this part SENT over peer
+        # channels (each transferred byte is counted exactly once, by its
+        # sender; sim/thread comms expose the same field as a constant 0)
+        self.p2p_fallbacks = 0       # above-threshold payloads that had to
+        # relay through the hub because a peer channel could not be used
         self._hub = hub
         self._seq = 0
         self._coll_timeout = coll_timeout
+        self._peer_net = peer_net
+        self._peer_addrs = list(peer_addrs or [])
+        self.p2p_threshold = p2p_threshold
+        # the data plane is usable only when EVERY part advertised a data
+        # port: a sender must know all destinations, and a sentinel in the
+        # hub values obliges every receiver to await a peer frame
+        self._peers_ok = (peer_net is not None
+                          and len(self._peer_addrs) == n_parts
+                          and all(a is not None for a in self._peer_addrs))
 
     # --- Communicator-compatible surface (local ranks) -------------------
     @property
@@ -160,17 +360,59 @@ class ProcTaskComm:
         arranges whenever the task fits one node) completes the collective
         locally: no hub round-trip, no parent traffic.  The serialize
         round-trip is kept so the result has identical copy semantics to the
-        spanning case (mutating it never aliases the caller's object)."""
+        spanning case (mutating it never aliases the caller's object).
+
+        A spanning task ships large payloads worker-to-worker (see the class
+        docstring); the hub round-trip remains as the per-collective control
+        barrier and the automatic fallback carrier."""
         if self.n_parts == 1:
             if self.cancelled.is_set():
                 raise CollectiveError("task cancelled")
             self._seq += 1
             return [serialize.loads(serialize.dumps(obj))]
         seq, self._seq = self._seq, self._seq + 1
+        data = serialize.dumps(obj)
+        hub_payload = data
+        if self._peers_ok and len(data) > self.p2p_threshold:
+            sent = 0
+            for p, addr in enumerate(self._peer_addrs):
+                if p == self.part:
+                    continue
+                wid, host, port = addr
+                if not self._peer_net.send(wid, (host, port), uid=self.uid,
+                                           attempt=self.attempt, seq=seq,
+                                           part=self.part, payload=data):
+                    break
+                sent += 1
+            # bytes already shipped to reachable peers are real peer-plane
+            # traffic even when the remaining sends force a hub fallback
+            self.p2p_bytes += sent * len(data)
+            if sent == self.n_parts - 1:
+                hub_payload = protocol.PEER_SENT
+            else:
+                # a peer copy may already be parked at some receivers; they
+                # will prefer the hub value and purge the duplicate at task
+                # end — correctness never depends on which copy is used
+                self.p2p_fallbacks += 1
         self.hub_calls += 1
         values = self._hub.call(self.uid, self.attempt, seq, self.part,
-                                serialize.dumps(obj), self._coll_timeout)
-        return [serialize.loads(v) for v in values]
+                                hub_payload, self._coll_timeout)
+        return [serialize.loads(self._resolve(j, v, seq, data))
+                for j, v in enumerate(values)]
+
+    def _resolve(self, part: int, hub_value: bytes, seq: int,
+                 own_data: bytes) -> bytes:
+        """Map one hub value to the actual payload bytes: inline data stays
+        as-is; the PEER_SENT placeholder means the bytes travelled (or are
+        in flight) on the peer plane."""
+        if hub_value != protocol.PEER_SENT:
+            return hub_value
+        if part == self.part:
+            return own_data
+        return self._peer_net.take(
+            (self.uid, self.attempt, seq, part), self._coll_timeout,
+            abort=lambda: ("task cancelled" if self.cancelled.is_set()
+                           else self._hub.dead_error(self.uid, self.attempt)))
 
     def barrier(self):
         self.allgather(None)
@@ -182,7 +424,7 @@ class ProcTaskComm:
 
 class Worker:
     def __init__(self, addr: tuple, worker_id: str, n_devices: int,
-                 heartbeat: float, token: str):
+                 heartbeat: float, token: str, p2p: bool = True):
         self.worker_id = worker_id
         self.n_devices = n_devices
         self.heartbeat = heartbeat
@@ -194,6 +436,12 @@ class Worker:
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self.chan = Channel(sock)
         self.hub = _Hub(self.chan)
+        self.peer_net: Optional[_PeerNet] = None
+        if p2p:
+            self.peer_net = _PeerNet(worker_id, token)
+            # advertise the interface the parent is reached through — the
+            # one address peers on other hosts can route to as well
+            self.peer_net.start(sock.getsockname()[0])
         self._tasks: dict = {}   # (uid, attempt) -> cancel Event, while the
         # part runs here; doubles as the is-this-attempt-alive check
         self._jax_devices = None
@@ -216,6 +464,13 @@ class Worker:
     def _run_part(self, d: dict, cancelled: threading.Event):
         uid, attempt, part = d["uid"], d["attempt"], d["part"]
         comm_s = 0.0
+        comm = None
+
+        def stats() -> dict:
+            return {"p2p_bytes": comm.p2p_bytes if comm else 0,
+                    "hub_calls": comm.hub_calls if comm else 0,
+                    "p2p_fallbacks": comm.p2p_fallbacks if comm else 0}
+
         try:
             devs = self._local_devices(d["local_devices"], d["build_comm"])
             if d["build_comm"]:
@@ -233,12 +488,15 @@ class Worker:
                                 n_parts=d["n_parts"], local_comm=local,
                                 hub=self.hub, attempt=attempt,
                                 cancelled=cancelled,
-                                placement=d.get("placement", ""))
+                                placement=d.get("placement", ""),
+                                peer_net=self.peer_net,
+                                peer_addrs=d.get("peer_addrs"),
+                                p2p_threshold=d.get("p2p_threshold", 1024))
             fn, args, kwargs = serialize.loads(d["payload"])
             res = fn(comm, *args, **kwargs)
             self.chan.send(protocol.PART_DONE, uid=uid, attempt=attempt,
                            part=part, result=serialize.dumps(res),
-                           error=None, comm_build_s=comm_s)
+                           error=None, comm_build_s=comm_s, **stats())
         except ConnectionClosed:
             pass                     # parent is gone; nothing to report to
         except Exception as e:  # noqa: BLE001 — report any payload error
@@ -246,12 +504,15 @@ class Worker:
                 self.chan.send(protocol.PART_DONE, uid=uid, attempt=attempt,
                                part=part, result=None,
                                error=f"{type(e).__name__}: {e}",
-                               comm_build_s=comm_s)
+                               comm_build_s=comm_s, **stats())
             except ConnectionClosed:
                 pass
         finally:
             self._tasks.pop((uid, attempt), None)
             self.hub.forget(uid, attempt)
+            if self.peer_net is not None:
+                # parked peer frames of this attempt are unclaimable now
+                self.peer_net.purge(uid, attempt)
 
     def _log(self, msg: str):
         print(f"[worker {self.worker_id} pid={os.getpid()} "
@@ -270,9 +531,12 @@ class Worker:
 
     # --- main loop --------------------------------------------------------
     def run(self):
+        data_addr = self.peer_net.data_addr if self.peer_net else None
         self.chan.send(protocol.HELLO, worker=self.worker_id, pid=os.getpid(),
                        n_devices=self.n_devices, token=self.token,
-                       platform=sys.platform)
+                       platform=sys.platform,
+                       data_host=data_addr[0] if data_addr else None,
+                       data_port=data_addr[1] if data_addr else None)
         threading.Thread(target=self._heartbeat_loop, daemon=True).start()
         while True:
             try:
@@ -312,10 +576,13 @@ def main(argv=None):
     p.add_argument("--n-devices", type=int, required=True)
     p.add_argument("--heartbeat", type=float, default=0.5)
     p.add_argument("--token", default="")
+    p.add_argument("--p2p", type=int, default=1,
+                   help="1: open a peer-data port (worker-to-worker "
+                        "collective payloads); 0: hub relay only")
     a = p.parse_args(argv)
     host, port = a.addr.rsplit(":", 1)
     Worker((host, int(port)), a.worker, a.n_devices, a.heartbeat,
-           a.token).run()
+           a.token, p2p=bool(a.p2p)).run()
 
 
 if __name__ == "__main__":

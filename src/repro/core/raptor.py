@@ -17,8 +17,8 @@ from typing import Optional, Sequence
 
 from repro.core.pilot import Pilot, PilotDescription, PilotManager
 from repro.core.scheduler import (
-    BATCH, HETEROGENEOUS, SchedulerSession, SimOptions, SimReport,
-    ThreadExecutor, VirtualClockExecutor, simulate,
+    HETEROGENEOUS, SchedulerSession, SimOptions, SimReport,
+    ThreadExecutor, simulate,
 )
 from repro.core.task import TaskDescription
 

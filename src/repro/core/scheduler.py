@@ -101,6 +101,10 @@ class TraceEvent:
     value: float = 0.0   # kind-specific payload (comm_build: seconds;
                          # device_failure: #devices lost; steal/return:
                          # #devices leased across partitions / handed back)
+    p2p: float = 0.0     # comm-stats evidence on terminal done/fail events:
+                         # bytes the task's collectives moved worker-to-
+                         # worker.  The process executor reports real bytes;
+                         # sim/thread backends report 0 — same schema.
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -177,13 +181,13 @@ class SchedulerSession:
 
     # -- trace ------------------------------------------------------------
     def _tr(self, kind: str, task: Optional[Task] = None, t: Optional[float] = None,
-            value: float = 0.0):
+            value: float = 0.0, p2p: float = 0.0):
         self.trace.append(TraceEvent(
             t=self.executor.now() if t is None else t, kind=kind,
             task=task.desc.name if task else "",
             uid=task.uid if task else -1,
             pipeline=task.desc.tags.get("pipeline", "default") if task else "",
-            ranks=task.desc.ranks if task else 0, value=value))
+            ranks=task.desc.ranks if task else 0, value=value, p2p=p2p))
 
     # -- pools ------------------------------------------------------------
     def _ensure_pools(self, descs: Sequence[TaskDescription]):
@@ -574,6 +578,11 @@ class SchedulerSession:
             return []    # event for a task already aborted by the executor
         del self.running[task.uid]
         self._release_task(task)
+        # comm-stats evidence travels with the completion event (last
+        # attempt wins on retries); 0 on backends without a cross-process
+        # data plane, real bytes/round-trips on the process executor
+        task.p2p_bytes = ev.p2p_bytes
+        task.hub_calls = ev.hub_calls
         if task.uid in self._ignored:
             self._ignored.discard(task.uid)
             self._dispatch()   # live twin finished after cancel: reclaim only
@@ -592,7 +601,7 @@ class SchedulerSession:
             # must not be cancelled or credited — just reclaim the devices
             task.state = TaskState.FAILED
             task.error = ev.error
-            self._tr("fail", task)
+            self._tr("fail", task, p2p=float(ev.p2p_bytes))
             self._dispatch()
             return []
 
@@ -609,7 +618,7 @@ class SchedulerSession:
             task.state = TaskState.FAILED
             task.error = ev.error
             task.end_time = now
-            self._tr("fail", task)
+            self._tr("fail", task, p2p=float(ev.p2p_bytes))
             # terminal: a still-running speculative duplicate must not flip
             # this task back to DONE later
             self._finished_uids.add(task.uid)
@@ -627,9 +636,11 @@ class SchedulerSession:
         target.state = TaskState.DONE
         target.end_time = now
         target.result = ev.result
+        target.p2p_bytes = ev.p2p_bytes
+        target.hub_calls = ev.hub_calls
         self._done_durations.setdefault(target.desc.name, []).append(
             now - target.start_time)
-        self._tr("done", target)
+        self._tr("done", target, p2p=float(ev.p2p_bytes))
         self._maybe_speculate()
         self._dispatch()
         return [target]

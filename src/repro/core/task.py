@@ -59,6 +59,9 @@ class Task:
     # devices prior attempts failed on; retries avoid them when possible
     placement: str = ""              # policy that placed this task's devices
     # (pack|spread; set by the scheduler at dispatch, recorded on the comm)
+    p2p_bytes: int = 0               # bytes the task's collectives moved
+    # worker-to-worker (peer data plane; 0 on sim/thread backends)
+    hub_calls: int = 0               # parent-hub round-trips the task paid
 
     @property
     def run_seconds(self) -> float:

@@ -6,7 +6,6 @@ of instrumentation for the collective-traffic accounting in benchmarks/).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def all_to_all(x, axis: str):

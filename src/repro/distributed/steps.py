@@ -7,7 +7,6 @@ path — and with concrete arrays for real training/serving.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

@@ -5,7 +5,6 @@ import jax.numpy as jnp
 
 
 def radix_partition_ref(buckets, n_buckets: int):
-    n = buckets.shape[0]
     onehot = buckets[:, None] == jnp.arange(n_buckets)[None, :]
     pos = (jnp.cumsum(onehot, axis=0) - onehot)
     within = jnp.sum(pos * onehot, axis=1).astype(jnp.int32)

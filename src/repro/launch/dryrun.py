@@ -172,7 +172,6 @@ def analysis_pass(cfg, shape, mesh, parallel):
 def run_cell(arch: str, shape_name: str, mesh_kind: str, parallel_overrides=None,
              out_path: Path | None = None, verbose: bool = True,
              analysis: bool | None = None, model_overrides=None):
-    import jax
     from repro.configs import ParallelConfig, get_config, get_shape, supports_shape
     from repro.distributed.steps import make_step
     from repro.launch.mesh import make_production_mesh

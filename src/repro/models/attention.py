@@ -13,12 +13,10 @@ lengths.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.context import shard_heads, shard_tokens
+from repro.distributed.context import shard_heads
 from repro.models.layers import apply_rope, dense_init, rms_norm, rope_sincos
 
 NEG_INF = -1e30

@@ -13,7 +13,7 @@ from repro.distributed.context import shard_heads, shard_tokens
 from repro.models import attention as attn
 from repro.models.attention import AttnMode
 from repro.models.layers import (
-    cross_entropy_loss, dense_init, embed_apply, embed_init, logits_apply,
+    cross_entropy_loss, embed_apply, embed_init, logits_apply,
     maybe_remat, mlp_apply, mlp_init, rms_norm, scan_unroll, sinusoidal_positions,
     _cache_dtype,
 )

@@ -182,7 +182,6 @@ def prefill(params, cfg, batch, smax: int, mode: AttnMode = AttnMode()):
                                 batch.get("prefix_embeds"))
     x, kvs = _trunk(params, cfg, x, positions, mode, collect_kv=True)
     ks, vs = kvs  # (ns, period, B, S, K, hd)
-    s = x.shape[1]
     cache = cache_init(cfg, x.shape[0], smax)
     cache["k"] = jax.lax.dynamic_update_slice_in_dim(
         cache["k"], ks.astype(cache["k"].dtype), 0, axis=3)

@@ -6,7 +6,6 @@ positions.  Decode: patch embeddings live in the prefix of the KV cache.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.models import transformer as tf
 from repro.models.attention import AttnMode

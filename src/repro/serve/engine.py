@@ -9,7 +9,7 @@ training tasks (examples/serve_lm.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -59,8 +59,6 @@ def etl_token_batches(comm, events: dict, doc_meta: dict, *, batch: int,
       3. sample-sort by (doc_id) so documents are contiguous
       4. emit the token column as (batch, seq) training blocks
     """
-    import jax.numpy as jnp
-
     from repro.dataframe import ops_dist as D
     from repro.dataframe import ops_local as L
     from repro.dataframe.table import Table

@@ -6,8 +6,6 @@ the params (see distributed/sharding.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -7,11 +7,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
 from typing import Callable, Iterable, Optional
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from repro.distributed import sharding as sh
@@ -45,7 +43,6 @@ class Trainer:
         self._seed = seed
 
     def init_state(self) -> TrainState:
-        from jax.sharding import NamedSharding
         pspecs = self.bundle.info["pspecs"]
         with self.mesh:
             init = jax.jit(

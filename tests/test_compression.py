@@ -1,15 +1,12 @@
 """int8+error-feedback gradient compression: bounded error, exact mean under
 shared scale, convergence on a quadratic with EF."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from tests._hypothesis_compat import given, settings, st
 
-from repro.distributed.compression import (
-    dequantize_int8, quantize_int8, tree_compressed_psum_mean,
-)
+from repro.distributed.compression import dequantize_int8, quantize_int8
 
 
 @settings(max_examples=25, deadline=None)

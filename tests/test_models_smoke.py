@@ -1,6 +1,5 @@
 """Per-arch REDUCED-config smoke tests (assignment requirement): one forward
 and one train step on CPU, asserting output shapes and no NaNs."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

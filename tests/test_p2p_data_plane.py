@@ -1,0 +1,297 @@
+"""Worker-to-worker data plane: peer-to-peer collective payloads.
+
+Wire-layer units (no subprocesses) stay in tier-1; everything spawning
+worker interpreters or exercising failure injection is ``integration`` (CI
+runs those — in BOTH halves of the ``REPRO_P2P`` matrix, so the hub-relay
+fallback is exercised end to end, not just the happy path).
+"""
+import signal
+import socket
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ProcessExecutor, SchedulerSession, TaskDescription, TaskState,
+)
+from repro.core.executors import protocol, serialize
+from repro.core.executors.worker import CollectiveError, _PeerNet
+
+if serialize.HAVE_CLOUDPICKLE:
+    import cloudpickle
+
+    # ship this module's payload functions by value: a worker process has no
+    # way to import the test module
+    cloudpickle.register_pickle_by_value(sys.modules[__name__])
+
+needs_cloudpickle = pytest.mark.skipif(
+    not serialize.HAVE_CLOUDPICKLE,
+    reason="cloudpickle needed to ship test-local payload functions")
+
+
+# ---------------------------------------------------------------------------
+# wire-layer units (no subprocesses)
+# ---------------------------------------------------------------------------
+def test_peer_sent_sentinel_cannot_collide_with_payloads():
+    """The hub placeholder must be distinguishable from every real payload:
+    serialize.dumps always yields a pickle stream (b"\\x80" PROTO opcode),
+    the sentinel deliberately starts with b"\\x00"."""
+    for obj in (None, 0, b"", "x", [1, 2], {"a": b"\x00p2p\x00"},
+                protocol.PEER_SENT):
+        assert serialize.dumps(obj)[:1] == b"\x80"
+    assert protocol.PEER_SENT[:1] == b"\x00"
+
+
+def test_peer_net_ships_frames_between_two_nets():
+    a, b = _PeerNet("wa", token="t"), _PeerNet("wb", token="t")
+    a.start("127.0.0.1")
+    b.start("127.0.0.1")
+    blob = b"z" * (2 << 20)
+    assert a.send("wb", b.data_addr, uid=1, attempt=0, seq=0, part=0,
+                  payload=blob)
+    assert b.take((1, 0, 0, 0), timeout=10) == blob
+    # reverse direction over b's own cache, and channel reuse on a second
+    # send (the cached-channel path)
+    assert b.send("wa", a.data_addr, uid=1, attempt=0, seq=0, part=1,
+                  payload=b"r1")
+    assert b.send("wa", a.data_addr, uid=1, attempt=0, seq=1, part=1,
+                  payload=b"r2")
+    assert a.take((1, 0, 0, 1), timeout=10) == b"r1"
+    assert a.take((1, 0, 1, 1), timeout=10) == b"r2"
+
+
+def test_peer_net_rejects_wrong_token():
+    srv = _PeerNet("srv", token="good")
+    srv.start("127.0.0.1")
+    rogue = _PeerNet("rogue", token="BAD")
+    # the frame is written before the server tears the channel down, so the
+    # send itself may "succeed" — the proof of rejection is that the payload
+    # never reaches the mailbox
+    rogue.send("srv", srv.data_addr, uid=9, attempt=0, seq=0, part=0,
+               payload=b"evil")
+    with pytest.raises(CollectiveError):
+        srv.take((9, 0, 0, 0), timeout=0.5)
+
+
+def test_peer_net_send_to_dead_port_fails_fast_not_hangs():
+    sock = socket.socket()
+    sock.bind(("127.0.0.1", 0))
+    dead_addr = sock.getsockname()
+    sock.close()                      # nothing listens here any more
+    net = _PeerNet("w", token="t")
+    t0 = time.monotonic()
+    assert net.send("gone", dead_addr, uid=1, attempt=0, seq=0, part=0,
+                    payload=b"x") is False
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_peer_net_take_unblocked_by_abort():
+    net = _PeerNet("w", token="t")
+    flag = threading.Event()
+    threading.Timer(0.2, flag.set).start()
+    t0 = time.monotonic()
+    with pytest.raises(CollectiveError, match="torn down"):
+        net.take((1, 0, 0, 0), timeout=60,
+                 abort=lambda: "torn down" if flag.is_set() else None)
+    assert time.monotonic() - t0 < 5.0   # aborted, not timed out
+
+
+def test_peer_net_purge_drops_stale_attempt_only():
+    net = _PeerNet("w", token="t")
+    net.put((7, 0, 0, 1), b"stale")
+    net.put((7, 1, 0, 1), b"fresh")
+    net.purge(7, 0)
+    assert net.take((7, 1, 0, 1), timeout=1) == b"fresh"
+    with pytest.raises(CollectiveError):
+        net.take((7, 0, 0, 1), timeout=0.2)
+
+
+def test_peer_net_frame_arriving_after_purge_is_dropped():
+    """Peer and hub channels have no mutual ordering: a frame landing AFTER
+    its attempt ended must be tombstoned away, not parked forever."""
+    net = _PeerNet("w", token="t")
+    net.purge(7, 0)                   # attempt over before the frame lands
+    net.put((7, 0, 1, 1), b"late")
+    assert not net._mail              # dropped, not leaked
+    with pytest.raises(CollectiveError):
+        net.take((7, 0, 1, 1), timeout=0.2)
+
+
+# ---------------------------------------------------------------------------
+# payloads shipped to workers (module-level, pickled by value)
+# ---------------------------------------------------------------------------
+_BLOB = 1 << 20          # well above the default 1 KiB p2p threshold
+
+
+def _xfer(comm, n_coll=3, nbytes=_BLOB):
+    """Each part allgathers a distinct large blob; verifies content AND
+    part-ordering of the gathered list, then reports the comm counters."""
+    blob = bytes([comm.part]) * nbytes
+    for _ in range(n_coll):
+        vals = comm.allgather(blob)
+        assert len(vals) == comm.n_parts
+        assert all(v == bytes([j]) * nbytes for j, v in enumerate(vals))
+    comm.barrier()
+    return {"p2p_bytes": comm.p2p_bytes, "hub_calls": comm.hub_calls,
+            "fallbacks": comm.p2p_fallbacks, "n_parts": comm.n_parts}
+
+
+def _small_gather(comm):
+    vals = comm.allgather(comm.part)
+    root = comm.bcast("tiny")
+    return {"vals": vals, "root": root, "p2p_bytes": comm.p2p_bytes,
+            "hub_calls": comm.hub_calls}
+
+
+def _slow_xfer(comm, n_coll=60, nbytes=256 << 10):
+    for _ in range(n_coll):
+        comm.allgather(bytes([comm.part]) * nbytes)
+        time.sleep(0.02)
+    return {"p2p_bytes": comm.p2p_bytes, "fallbacks": comm.p2p_fallbacks}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (subprocess-spawning)
+# ---------------------------------------------------------------------------
+@needs_cloudpickle
+@pytest.mark.integration
+def test_large_allgather_moves_bytes_peer_to_peer():
+    """Acceptance: on a 2-worker spanning task a large-payload allgather
+    moves its bytes worker-to-worker — p2p_bytes > 0, zero fallbacks, and
+    the hub relayed only control-sized frames (never the payloads)."""
+    n_coll, nbytes = 3, _BLOB
+    with ProcessExecutor(n_workers=2, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.2, tick=0.02, p2p=True) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="xfer", ranks=2, fn=_xfer,
+                                        kwargs={"n_coll": n_coll},
+                                        tags={"pipeline": "p"})], timeout=120)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE
+        stats = task.result
+        # part 0 sent each of its n_coll blobs to exactly one peer
+        assert stats["n_parts"] == 2
+        assert stats["p2p_bytes"] >= n_coll * nbytes
+        assert stats["fallbacks"] == 0
+        # executor-level evidence: both parts' bytes, and a hub that carried
+        # only placeholders + the tiny barrier tokens — never a payload
+        assert ex.p2p_bytes >= 2 * n_coll * nbytes
+        assert ex.hub_relay_bytes < 1024
+        assert ex.hub_calls == 2 * (n_coll + 1)     # control kept per coll
+        # the trace carries the same evidence (p2p field on the done event)
+        done = [e for e in rep.trace if e.kind == "done"]
+        assert done and done[0].p2p == float(task.p2p_bytes)
+        assert task.p2p_bytes == ex.p2p_bytes
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_peer_port_disabled_same_workload_passes_via_hub():
+    """With the peer plane off (p2p=False: workers open no data port, the
+    parent ships no address book) the identical workload still passes —
+    payloads relay through the hub, and the counters say so."""
+    n_coll, nbytes = 3, _BLOB
+    with ProcessExecutor(n_workers=2, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.2, tick=0.02, p2p=False) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="xfer", ranks=2, fn=_xfer,
+                                        kwargs={"n_coll": n_coll},
+                                        tags={"pipeline": "p"})], timeout=120)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE
+        assert task.result["p2p_bytes"] == 0
+        assert task.p2p_bytes == 0 and ex.p2p_bytes == 0
+        assert ex.hub_relay_bytes >= 2 * n_coll * nbytes
+        # same collective count either way: the data plane changes how the
+        # bytes travel, never the collective semantics
+        assert task.hub_calls == 2 * (n_coll + 1)
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_small_payloads_stay_inline_on_hub_control_frames():
+    """Control-sized payloads (ints, barrier tokens) ride the hub frame
+    even with the peer plane on: a peer round-trip for 10 bytes would cost
+    more than it moves."""
+    with ProcessExecutor(n_workers=2, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.2, tick=0.02, p2p=True) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="small", ranks=2,
+                                        fn=_small_gather,
+                                        tags={"pipeline": "p"})], timeout=120)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE
+        assert task.result["vals"] == [0, 1]
+        assert task.result["root"] == "tiny"
+        assert task.result["p2p_bytes"] == 0
+        assert ex.p2p_bytes == 0
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_three_worker_allgather_is_part_ordered():
+    """3 parts on 3 workers: every part receives every other part's large
+    payload directly, and the gathered list stays part-index ordered."""
+    with ProcessExecutor(n_workers=3, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.2, tick=0.02, p2p=True) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="tri", ranks=3, fn=_xfer,
+                                        kwargs={"n_coll": 2},
+                                        tags={"pipeline": "p"})], timeout=120)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE
+        assert task.result["n_parts"] == 3
+        assert task.result["fallbacks"] == 0
+        # each of 3 parts sent 2 blobs to 2 peers
+        assert ex.p2p_bytes >= 3 * 2 * 2 * _BLOB
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_sigkill_mid_peer_transfer_recovers_via_retry_with_exclusion():
+    """Acceptance + failure semantics: SIGKILL a worker while a spanning
+    task is streaming large payloads peer-to-peer.  The loss must surface as
+    the existing targeted ``device_failure`` (exact inventory) and the task
+    must retry WITH EXCLUSION on the survivors — completing over fresh peer
+    channels (attempt-keyed mailbox: no stale frame of the dead attempt is
+    ever credited to the retry) — not hang out the collective timeout."""
+    with ProcessExecutor(n_workers=3, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.2, tick=0.02, p2p=True) as ex:
+        rm = ex.resource_manager()
+        sess = SchedulerSession(ex, rm, tick=0.02)
+        sess.submit([TaskDescription(name="victim", ranks=2, fn=_slow_xfer,
+                                     max_retries=2, tags={"pipeline": "p"})])
+        time.sleep(0.5)               # mid-transfer: several colls in flight
+        ex.kill_worker("w0", signal.SIGKILL)
+        rep = sess.drain(timeout=120).close()
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE
+        fails = rep.events("device_failure")
+        assert len(fails) == 1 and fails[0].value == 1.0
+        assert task.retries >= 1 and len(rep.events("retry")) >= 1
+        # exclusion recorded the dead worker's device; the retry ran on the
+        # two survivors and still used the peer plane (no stale channels)
+        assert any(d.worker == "w0" for d in task.excluded_devices)
+        assert {d.worker for d in task.devices} == {"w1", "w2"}
+        assert task.result["p2p_bytes"] > 0
+        assert task.result["fallbacks"] == 0
+        assert rm.total == 2          # pool shrank by exactly the dead node
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_env_var_matrix_knob_disables_peer_plane(monkeypatch):
+    """REPRO_P2P=0 (the CI matrix knob) must force hub relay without any
+    code change — the default-resolution path of ProcessExecutor(p2p=None)."""
+    monkeypatch.setenv("REPRO_P2P", "0")
+    with ProcessExecutor(n_workers=2, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.2, tick=0.02) as ex:
+        assert ex.p2p is False
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="xfer", ranks=2, fn=_xfer,
+                                        kwargs={"n_coll": 1},
+                                        tags={"pipeline": "p"})], timeout=120)
+        assert rep.tasks[0].state == TaskState.DONE
+        assert ex.p2p_bytes == 0 and ex.hub_relay_bytes >= 2 * _BLOB

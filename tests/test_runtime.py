@@ -1,6 +1,5 @@
 """Scheduler / pilot runtime invariants — the paper-core logic, including
 hypothesis property tests over random task mixes."""
-import numpy as np
 import pytest
 
 from tests._hypothesis_compat import given, settings, st

@@ -9,7 +9,7 @@ import time
 import pytest
 
 from repro.core import (
-    BATCH, HETEROGENEOUS, InsufficientResources, Pipeline, ProcessExecutor,
+    BATCH, InsufficientResources, Pipeline, ProcessExecutor,
     ResourceManager, SchedulerSession, SimOptions, Task, TaskDescription,
     TaskState, ThreadExecutor, VirtualClockExecutor, interleave_by_pipeline,
     run_pipelines, simulate,

@@ -1,15 +1,12 @@
 """Sharding rules: every param leaf gets a valid spec; divisibility
 fallbacks; cache specs; HLO collective parser on known programs."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ParallelConfig, get_config, list_archs, reduced
+from repro.configs import ParallelConfig, get_config, list_archs
 from repro.distributed import sharding as sh
-from repro.launch.dryrun import parse_collectives
-from repro.launch.mesh import make_local_mesh
 from repro.models import registry
 
 
