@@ -188,6 +188,55 @@ def placement_compare(n_coll: int = 16):
     return rows
 
 
+def elastic_grow_latency():
+    """Elastic pilot smoke (BENCH_ELASTIC=1): how quickly pending work runs
+    after an elastic grow.  A 2-rank task is submitted against a 1-device
+    pilot (infeasible), then ``add_worker`` spawns a second worker at
+    runtime.  Reported from the ONE TraceEvent stream: time-to-first-
+    dispatch measured from add_worker() returning (the paper-facing number:
+    includes only scheduler absorption, the interpreter spawn already
+    happened inside add_worker) and the add_worker wall time itself (the
+    full cost of acquiring a node mid-run).  Rows land in
+    ``benchmarks/artifacts/elastic_summary.json`` (the CI artifact)."""
+    import time as _t
+
+    from repro.core import ProcessExecutor, SchedulerSession
+
+    with ProcessExecutor(n_workers=1, devices_per_worker=1,
+                         build_comm=False, tick=0.005,
+                         extra_pythonpath=[str(ROOT)]) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.005)
+        # warm-up: the first dispatch pays payload-import costs
+        sess.run([TaskDescription(name="warm", ranks=1, fn=_nop,
+                                  tags={"pipeline": "bench"})], timeout=120)
+        sess.submit([TaskDescription(name="wide", ranks=2, fn=_nop,
+                                     tags={"pipeline": "bench"})])
+        t0 = _t.perf_counter()
+        ex.add_worker(devices_per_worker=1)
+        t_added = _t.perf_counter()        # same clock as executor.now()
+        sess.drain(timeout=120)
+        rep = sess.close()
+        ts = trace_summary(rep)
+    grow_t = next(e.t for e in rep.trace if e.kind == "grow")
+    disp_t = next(e.t for e in rep.trace
+                  if e.kind == "dispatch" and e.task == "wide")
+    row = {
+        "add_worker_wall_s": t_added - t0,
+        "grow_to_dispatch_s": disp_t - grow_t,
+        "added_to_dispatch_s": disp_t - t_added,
+        "trace_summary": ts,
+    }
+    assert ts["n_grow"] == 1 and ts["n_dispatch"] == 2
+    emit("elastic/add_worker_wall", row["add_worker_wall_s"] * 1e6,
+         "interpreter spawn + HELLO + address-book push")
+    emit("elastic/time_to_first_dispatch", row["added_to_dispatch_s"] * 1e6,
+         f"grow_to_dispatch_us={row['grow_to_dispatch_s'] * 1e6:.1f}")
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "elastic_summary.json").write_text(
+        json.dumps(row, indent=2, default=str))
+    return row
+
+
 def _p2p_probe(comm, n_coll=6, nbytes=4 << 20):
     """A join/sort-shaped exchange: every part allgathers a large blob
     ``n_coll`` times (the paper's spanning intermediates), then reports the
@@ -282,6 +331,10 @@ def run():
     if os.environ.get("BENCH_P2P", "0") == "1" or "--p2p" in sys.argv:
         # opt-in: peer data plane vs hub relay for large spanning payloads
         res["p2p"] = p2p_compare()
+    if os.environ.get("BENCH_ELASTIC", "0") == "1" or "--elastic" in sys.argv:
+        # opt-in: runtime add_worker -> time-to-first-dispatch for pending
+        # work that could not fit the initial inventory
+        res["elastic"] = elastic_grow_latency()
     return res
 
 

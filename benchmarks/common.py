@@ -57,6 +57,11 @@ def trace_summary(report) -> dict:
         "n_done": kinds.get("done", 0),
         "n_retry": kinds.get("retry", 0),
         "n_speculate": kinds.get("speculate", 0),
+        # elastic-pool evidence: grow/retire events the core absorbed
+        # (add_worker/retire_worker, inject_grow/inject_retire, grow_at/
+        # retire_at) — zeros on a static-pool run
+        "n_grow": kinds.get("grow", 0),
+        "n_retire": kinds.get("retire", 0),
         "mean_wait_s": sum(waits) / len(waits) if waits else 0.0,
         "comm_build_total_s": sum(comm),
         "comm_build_mean_s": sum(comm) / len(comm) if comm else 0.0,

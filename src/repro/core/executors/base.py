@@ -23,7 +23,7 @@ from repro.core.task import Task
 @dataclasses.dataclass
 class ExecEvent:
     """What an executor delivers back to the scheduler core."""
-    kind: str                      # done|fail|tick|device_failure
+    kind: str                      # done|fail|tick|device_failure|grow|retire
     task: Optional[Task] = None
     result: Any = None
     error: Optional[str] = None
@@ -32,12 +32,14 @@ class ExecEvent:
     # worker-to-worker (process executor's peer data plane; identically 0
     # on the in-process and virtual backends — uniform trace evidence)
     hub_calls: int = 0             # parent-hub round-trips the task paid
-    n_devices: int = 0             # device_failure payload
-    devices: tuple = ()            # device_failure: the EXACT devices lost
-    # (empty -> the core shrinks the pool by n_devices arbitrary free
-    # devices, the virtual-clock injection semantics; non-empty -> those
-    # specific handles die wherever they are, busy or free — how a process
-    # executor reports a crashed worker's inventory)
+    n_devices: int = 0             # device_failure/grow/retire payload
+    devices: tuple = ()            # device_failure/retire: the EXACT devices
+    # lost or retired (empty -> the core shrinks the pool by n_devices
+    # arbitrary free devices, the virtual-clock injection semantics;
+    # non-empty -> those specific handles leave wherever they are, busy or
+    # free — how a process executor reports a crashed or retired worker's
+    # inventory).  grow: the EXACT devices joining the pool (empty -> the
+    # core invents n_devices fresh handles, again the virtual-clock case)
 
 
 class Executor(abc.ABC):
@@ -118,3 +120,21 @@ class QueueEventExecutor(Executor):
                                else min(timeout, self.tick))
         except _queue.Empty:
             return ExecEvent("tick")
+
+    # -- elastic pool injection --------------------------------------------
+    # Any wall-clock executor can hand new device handles to (or withdraw
+    # free ones from) the scheduler core at runtime: the core absorbs the
+    # event on its next poll, mutates the pool, emits the matching
+    # ``grow``/``retire`` trace event, and immediately re-dispatches pending
+    # work.  ``ProcessExecutor.add_worker``/``retire_worker`` are the
+    # full-stack variants (they spawn/drain a worker process around the same
+    # injection); ``ThreadExecutor`` users call these directly.
+    def inject_grow(self, devices):
+        devices = tuple(devices)
+        self._q.put(ExecEvent("grow", n_devices=len(devices),
+                              devices=devices))
+
+    def inject_retire(self, devices):
+        devices = tuple(devices)
+        self._q.put(ExecEvent("retire", n_devices=len(devices),
+                              devices=devices))

@@ -31,6 +31,16 @@ channel or a stale heartbeat marks the worker lost, which surfaces as ONE
 ``device_failure`` ExecEvent naming the exact dead devices plus a ``fail``
 event per task that had a part there — driving the scheduler's existing
 retry-with-exclusion / pool-shrink logic with true process isolation.
+
+The pilot is ELASTIC at runtime (the Radical-Pilot resize the paper leans
+on): ``add_worker`` spawns a fresh interpreter mid-run, completes the same
+HELLO handshake, pushes the refreshed peer address book to every live
+worker (PEERS_UPDATE), and queues a ``grow`` ExecEvent so the scheduler
+registers the new ``worker:index`` inventory and backfills pending work in
+the same step; ``retire_worker`` is the graceful inverse — stop leasing,
+drain in-flight parts (or fail them for retry-with-exclusion when
+``immediate=True``), dismiss the process, and evict the retiree from the
+survivors' peer-channel caches.  Worker ids are never reused.
 """
 from __future__ import annotations
 
@@ -74,6 +84,9 @@ class _WorkerHandle:
         self.devices = tuple(ProcDevice(wid, i) for i in range(n_devices))
         self.chan: Optional[Channel] = None
         self.alive = False
+        self.retiring = False    # graceful exit in progress: no new parts
+        # may land here, but in-flight parts (and their hub collectives)
+        # keep flowing until the drain completes
         self.last_hb = _time.monotonic()
         self.data_addr: Optional[tuple] = None   # (host, port) of the
         # worker's peer-data listener, from its HELLO; None when the peer
@@ -182,6 +195,11 @@ class ProcessExecutor(QueueEventExecutor):
         self._closed = False
         self._listener: Optional[socket.socket] = None
         self._logdir: Optional[Path] = None
+        self._token: Optional[str] = None
+        self._widx = len(self._counts)   # next elastic worker index: ids are
+        # never reused, so a retired w1's stale state can't haunt a newcomer
+        self._grow_lock = threading.Lock()   # serializes add_worker: the
+        # registration accept loop matches HELLOs against ONE pending id
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -204,50 +222,48 @@ class ProcessExecutor(QueueEventExecutor):
         env.update(self.env_override)
         return env
 
-    def start(self) -> "ProcessExecutor":
-        if self._started:
-            return self
-        self._logdir = Path(tempfile.mkdtemp(prefix="repro-procexec-"))
-        token = secrets.token_hex(8)
-        lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        lst.bind(("127.0.0.1", 0))
-        lst.listen(len(self._counts))
-        lst.settimeout(1.0)
-        self._listener = lst
-        port = lst.getsockname()[1]
-        for i, k in enumerate(self._counts):
-            wid = f"w{i}"
-            log = self._logdir / f"{wid}.log"
-            with open(log, "wb") as logf:   # Popen dups the fd; close ours
-                proc = subprocess.Popen(
-                    [self.python, "-m", "repro.core.executors.worker",
-                     "--addr", f"127.0.0.1:{port}", "--worker", wid,
-                     "--n-devices", str(k),
-                     "--heartbeat", str(self.hb_interval), "--token", token,
-                     "--p2p", "1" if self.p2p else "0"],
-                    env=self._worker_env(k), stdout=logf,
-                    stderr=subprocess.STDOUT)
-            self.workers[wid] = _WorkerHandle(wid, proc, k, log)
-        deadline = _time.monotonic() + self.start_timeout
-        pending = set(self.workers)
+    def _spawn_worker(self, wid: str, k: int) -> _WorkerHandle:
+        port = self._listener.getsockname()[1]
+        log = self._logdir / f"{wid}.log"
+        with open(log, "wb") as logf:   # Popen dups the fd; close ours
+            proc = subprocess.Popen(
+                [self.python, "-m", "repro.core.executors.worker",
+                 "--addr", f"127.0.0.1:{port}", "--worker", wid,
+                 "--n-devices", str(k),
+                 "--heartbeat", str(self.hb_interval),
+                 "--token", self._token,
+                 "--p2p", "1" if self.p2p else "0"],
+                env=self._worker_env(k), stdout=logf,
+                stderr=subprocess.STDOUT)
+        wh = _WorkerHandle(wid, proc, k, log)
+        self.workers[wid] = wh
+        return wh
+
+    def _accept_hellos(self, pending: set, timeout: float):
+        """Accept registrations on the pilot listener until every worker in
+        ``pending`` completed its HELLO.  Raises RuntimeError (with the
+        first culprit's log tail) on timeout or a worker dying first; the
+        caller owns cleanup — start() kills the whole pilot, add_worker()
+        reaps only the newcomer."""
+        deadline = _time.monotonic() + timeout
         while pending:
             if _time.monotonic() > deadline:
-                self._kill_all()
                 raise RuntimeError(
                     f"workers {sorted(pending)} did not register within "
-                    f"{self.start_timeout}s; first log tail:\n"
+                    f"{timeout}s; first log tail:\n"
                     f"{self.workers[sorted(pending)[0]].log_tail()}")
             for wid in list(pending):
                 rc = self.workers[wid].proc.poll()
                 if rc is not None:
-                    self._kill_all()
                     raise RuntimeError(
                         f"worker {wid} exited rc={rc} during startup:\n"
                         f"{self.workers[wid].log_tail()}")
             try:
-                sock, _ = lst.accept()
+                sock, _ = self._listener.accept()
             except socket.timeout:
                 continue
+            except OSError as e:
+                raise RuntimeError(f"pilot listener closed: {e}") from e
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             # accepted sockets are always blocking (they do not inherit the
             # listener's timeout); bound the handshake so a stray local
@@ -259,7 +275,7 @@ class ProcessExecutor(QueueEventExecutor):
             except ConnectionClosed:
                 chan.close()
                 continue
-            if kind != protocol.HELLO or d.get("token") != token or \
+            if kind != protocol.HELLO or d.get("token") != self._token or \
                     d.get("worker") not in pending:
                 chan.close()
                 continue
@@ -275,6 +291,24 @@ class ProcessExecutor(QueueEventExecutor):
             chan.on_traffic = (lambda w=wh: setattr(
                 w, "last_hb", _time.monotonic()))
             pending.discard(wh.wid)
+
+    def start(self) -> "ProcessExecutor":
+        if self._started:
+            return self
+        self._logdir = Path(tempfile.mkdtemp(prefix="repro-procexec-"))
+        self._token = secrets.token_hex(8)
+        lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        lst.bind(("127.0.0.1", 0))
+        lst.listen(max(len(self._counts), 4))
+        lst.settimeout(1.0)
+        self._listener = lst
+        for i, k in enumerate(self._counts):
+            self._spawn_worker(f"w{i}", k)
+        try:
+            self._accept_hellos(set(self.workers), self.start_timeout)
+        except RuntimeError:
+            self._kill_all()
+            raise
         for wh in self.workers.values():
             threading.Thread(target=self._reader, args=(wh,),
                              daemon=True).start()
@@ -289,14 +323,14 @@ class ProcessExecutor(QueueEventExecutor):
         self.shutdown()
 
     def _kill_all(self):
-        for wh in self.workers.values():
+        for wh in list(self.workers.values()):
             if wh.proc.poll() is None:
                 wh.proc.kill()
 
     def shutdown(self, grace: float = 2.0):
         """Stop every worker (SHUTDOWN frame, then SIGKILL after ``grace``)."""
         self._closed = True
-        for wh in self.workers.values():
+        for wh in list(self.workers.values()):
             if wh.alive and wh.chan is not None:
                 try:
                     wh.chan.send(protocol.SHUTDOWN)
@@ -304,7 +338,7 @@ class ProcessExecutor(QueueEventExecutor):
                     pass
             wh.alive = False
         deadline = _time.monotonic() + grace
-        for wh in self.workers.values():
+        for wh in list(self.workers.values()):
             while wh.proc.poll() is None and _time.monotonic() < deadline:
                 _time.sleep(0.02)
             if wh.proc.poll() is None:
@@ -323,12 +357,158 @@ class ProcessExecutor(QueueEventExecutor):
         self.workers[wid].proc.send_signal(sig)
 
     # ------------------------------------------------------------------ #
+    # elasticity: grow and retire workers at runtime
+    # ------------------------------------------------------------------ #
+    def add_worker(self, devices_per_worker: Optional[int] = None,
+                   timeout: Optional[float] = None) -> str:
+        """Elastic grow: spawn ONE fresh worker interpreter mid-run and hand
+        its inventory to the scheduler.
+
+        The newcomer completes the normal HELLO handshake (including its
+        peer-data port), the refreshed address book is pushed to every live
+        worker (PEERS_UPDATE — subsequent spanning tasks can move payloads
+        p2p to/from the new node), and a ``grow`` ExecEvent naming the exact
+        new ``worker:index`` handles is queued for the scheduler core, which
+        adds them to the live ResourceManager (``add_devices``), emits the
+        ``grow`` trace event, and re-dispatches pending work in the same
+        step.  ``Executor.topology`` needs no update call — it classifies by
+        handle, so the placement layer sees the new node immediately.
+
+        Returns the new worker id (e.g. ``"w2"``).  Ids are never reused.
+        """
+        self.start()
+        if self._closed:
+            raise RuntimeError("executor is shut down")
+        k = devices_per_worker if devices_per_worker is not None else \
+            (self._counts[0] if self._counts else 2)
+        with self._grow_lock:
+            wid = f"w{self._widx}"
+            self._widx += 1
+            wh = self._spawn_worker(wid, k)
+            try:
+                self._accept_hellos({wid}, timeout or self.start_timeout)
+            except RuntimeError:
+                self.workers.pop(wid, None)
+                if wh.proc.poll() is None:
+                    wh.proc.kill()
+                    wh.proc.wait()
+                raise
+            self._counts.append(k)
+            threading.Thread(target=self._reader, args=(wh,),
+                             daemon=True).start()
+        self._broadcast_peers()
+        self._q.put(ExecEvent("grow", n_devices=k, devices=wh.devices))
+        return wid
+
+    def retire_worker(self, wid: str, immediate: bool = False,
+                      drain_timeout: float = 120.0):
+        """Elastic shrink, the graceful counterpart of a worker loss.
+
+        Queues a ``retire`` ExecEvent FIRST (so the scheduler core stops
+        leasing the worker's devices before it sees any later completion),
+        then either *drains* — blocks until every in-flight part hosted on
+        ``wid`` finished on its own, so no task loses results — or, with
+        ``immediate=True``, fails the worker's in-flight parts now, driving
+        the core's ordinary retry-with-exclusion onto the survivors (the
+        retired inventory has already left the pool, so the retry cannot
+        land back on it).  A drain that outlives ``drain_timeout`` escalates
+        to the immediate path rather than wedging the caller.
+
+        Either way the worker is then dismissed (SHUTDOWN, SIGKILL after a
+        grace period), its channel closed, and the refreshed address book
+        pushed to the survivors (PEERS_UPDATE) so their cached peer channels
+        and mailboxes to the retiree are evicted — no per-payload fallback
+        discovery, ``p2p_fallbacks`` stays 0 after a clean retire.  Unlike a
+        crash, NO ``device_failure`` event is emitted."""
+        wh = self.workers[wid]
+        with self._lock:
+            if not wh.alive or wh.retiring:
+                return
+            wh.retiring = True
+        self._q.put(ExecEvent("retire", n_devices=wh.n_devices,
+                              devices=wh.devices))
+        if immediate:
+            self._retire_parts(wid)
+        else:
+            deadline = _time.monotonic() + drain_timeout
+            while wh.alive and self._busy_parts(wid):
+                if _time.monotonic() > deadline:
+                    self._retire_parts(wid)   # drain stuck: cut losses, the
+                    break                     # retry lands on survivors
+                _time.sleep(0.02)
+        # dismiss the worker; its reader thread exits on the closed channel
+        # and _worker_lost sees alive=False — a retire is not a failure
+        wh.alive = False
+        if wh.chan is not None:
+            try:
+                wh.chan.send(protocol.SHUTDOWN)
+            except ConnectionClosed:
+                pass
+        deadline = _time.monotonic() + 2.0
+        while wh.proc.poll() is None and _time.monotonic() < deadline:
+            _time.sleep(0.02)
+        if wh.proc.poll() is None:
+            wh.proc.kill()
+            wh.proc.wait()
+        if wh.chan is not None:
+            wh.chan.close()
+        self._broadcast_peers(removed=(wid,))
+
+    def _busy_parts(self, wid: str) -> bool:
+        """True while any in-flight tracker still owes a part hosted on
+        ``wid`` — the drain condition for a graceful retire."""
+        with self._lock:
+            return any(
+                not t.delivered and any(
+                    owner == wid and part in t.remaining
+                    for part, owner in enumerate(t.part_workers))
+                for t in self._running.values())
+
+    def _retire_parts(self, wid: str):
+        """Immediate retire: fail every in-flight part hosted on ``wid``.
+        Sibling parts are aborted cooperatively (the usual partial-failure
+        path) and the task's single fail event drives retry-with-exclusion
+        on the surviving workers."""
+        with self._lock:
+            victims = [t for t in self._running.values()
+                       if wid in t.part_workers and not t.delivered]
+        for tracker in victims:
+            for part, owner in enumerate(tracker.part_workers):
+                if owner == wid:
+                    self._part_terminal(tracker, part,
+                                        error=f"worker {wid} retired")
+
+    def _broadcast_peers(self, removed: Sequence[str] = ()):
+        """Push the refreshed peer address book (PEERS_UPDATE) to every live
+        worker after a membership change, naming departed ids so cached
+        peer channels to a dead/retired worker are evicted promptly instead
+        of being discovered per payload via the hub fallback."""
+        # snapshot before iterating: a concurrent add_worker may resize the
+        # dict mid-broadcast (this runs on monitor/reader threads too)
+        handles = list(self.workers.values())
+        book = {w.wid: w.data_addr for w in handles
+                if w.alive and not w.retiring and w.data_addr is not None}
+        for w in handles:
+            if w.alive and w.chan is not None:
+                try:
+                    w.chan.send(protocol.PEERS_UPDATE, workers=book,
+                                removed=list(removed))
+                except ConnectionClosed:
+                    pass
+
+    # ------------------------------------------------------------------ #
     # inventory
     # ------------------------------------------------------------------ #
     def devices(self) -> tuple:
-        """All ProcDevice handles, worker-major — feed to ResourceManager."""
+        """Current ProcDevice inventory, worker-major — feed to
+        ResourceManager.  Retired and lost workers' handles are gone; a
+        worker added at runtime contributes its handles the moment its
+        HELLO completed."""
         self.start()
-        return tuple(d for wh in self.workers.values() for d in wh.devices)
+        # snapshot: add_worker inserts into the dict from another thread,
+        # and dict iteration concurrent with a resize raises RuntimeError
+        return tuple(d for wh in list(self.workers.values())
+                     if wh.alive and not wh.retiring for d in wh.devices)
 
     def resource_manager(self) -> ResourceManager:
         return ResourceManager(self.devices())
@@ -378,10 +558,14 @@ class ProcessExecutor(QueueEventExecutor):
                 f"{tracker.n_parts} workers; omit mesh_shape or pack the "
                 f"task into one worker")
             return
-        dead = [w for w in part_workers if not self.workers[w].alive]
+        dead = [w for w in part_workers
+                if not self.workers[w].alive or self.workers[w].retiring]
         if dead:
-            self._fail_all_parts(tracker,
-                                 f"worker {dead[0]} lost before launch")
+            # lost before launch, or racing a retire that the scheduler has
+            # not absorbed yet: fail fast so the ordinary retry re-places
+            # the task on the remaining pool
+            self._fail_all_parts(
+                tracker, f"worker {dead[0]} unavailable before launch")
             return
         try:
             payload = serialize.dumps(
@@ -615,3 +799,6 @@ class ProcessExecutor(QueueEventExecutor):
                 if owner == wid:
                     self._part_terminal(tracker, part,
                                         error=f"worker {wid} lost: {reason}")
+        # survivors evict their cached peer channels to the dead worker now,
+        # not on their next (doomed) send to it
+        self._broadcast_peers(removed=(wid,))

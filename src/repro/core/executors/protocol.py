@@ -34,6 +34,12 @@ parent -> worker:
   COLL_RESULT {uid, attempt, seq, values: [bytes]}     gathered contributions
   COLL_ERROR {uid, attempt, seq|None, error}           participant died
   CANCEL     {uid, attempt}                            cooperative abort
+  PEERS_UPDATE {workers: {worker: (host, port)|None},
+              removed: [worker]}                       refreshed peer address
+              book after an elastic grow/retire/loss; a worker closes and
+              evicts its cached peer channel to every ``removed`` id
+              immediately instead of discovering the dead channel per
+              payload (the hub-fallback path)
   SHUTDOWN   {}                                        clean exit
 
 worker -> worker (peer data plane, same framing on the data port):
@@ -57,6 +63,7 @@ LAUNCH = "launch"
 COLL_RESULT = "coll_result"
 COLL_ERROR = "coll_error"
 CANCEL = "cancel"
+PEERS_UPDATE = "peers_update"
 SHUTDOWN = "shutdown"
 PEER_HELLO = "peer_hello"
 PEER_DATA = "peer_data"

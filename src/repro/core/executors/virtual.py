@@ -36,6 +36,12 @@ class SimOptions:
     speculative_factor: Optional[float] = None   # e.g. 1.5 -> spec-exec on
     failure_prob: float = 0.0            # chance a task attempt fails
     device_failures: Sequence[tuple] = ()  # [(time_s, n_devices), ...]
+    grow_at: Sequence[tuple] = ()        # [(time_s, n_devices), ...]: elastic
+    # grow — the core invents fresh handles and backfills pending work, so
+    # elastic scenarios (paper: pilot resize mid-run) replay deterministically
+    retire_at: Sequence[tuple] = ()      # [(time_s, n_devices), ...]: graceful
+    # shrink — up to n free devices leave the pool (busy ones stay with
+    # their tasks; the executor-level analogue is ProcessExecutor.retire_worker)
     placement: str = "spread"            # pack|spread (see core/placement.py)
     work_stealing: bool = False          # BATCH: lease idle partition devices
     devices_per_node: int = 0            # synthetic topology: devices per
@@ -64,6 +70,14 @@ class VirtualClockExecutor(Executor):
             heapq.heappush(self._heap,
                            (ft, next(self._seq),
                             ExecEvent("device_failure", n_devices=nf)))
+        for gt, ng in self.opts.grow_at:
+            heapq.heappush(self._heap,
+                           (gt, next(self._seq),
+                            ExecEvent("grow", n_devices=ng)))
+        for rt, nr in self.opts.retire_at:
+            heapq.heappush(self._heap,
+                           (rt, next(self._seq),
+                            ExecEvent("retire", n_devices=nr)))
 
     def now(self) -> float:
         return self._now

@@ -239,6 +239,17 @@ class _PeerNet:
             old.close()
         return chan
 
+    def evict(self, wid: str):
+        """Close and drop the cached outgoing channel to ``wid`` — called
+        when the parent announces the peer retired or died (PEERS_UPDATE).
+        Without this the half-dead channel lingers for the worker's life;
+        worse, if a task's address book ever re-used the id, the first send
+        would burn its one retry on the stale socket."""
+        with self._out_lock:
+            chan = self._out.pop(wid, None)
+        if chan is not None:
+            chan.close()
+
     def send(self, wid: str, addr: tuple, **fields) -> bool:
         """Ship one PEER_DATA frame to worker ``wid``; True on success.  A
         stale cached channel (peer restarted its end, half-closed socket) is
@@ -564,6 +575,14 @@ class Worker:
                     cancelled.set()
                     self.hub.fail(d["uid"], d["attempt"], None,
                                   "task cancelled")
+            elif kind == protocol.PEERS_UPDATE:
+                # elastic membership change: evict cached channels to the
+                # departed peers NOW — not lazily on the next failed send
+                # (which would cost a fallback).  Live addresses stay
+                # per-task: every spanning LAUNCH ships its own book.
+                if self.peer_net is not None:
+                    for wid in d.get("removed", ()):
+                        self.peer_net.evict(wid)
             elif kind == protocol.SHUTDOWN:
                 self._log("exiting: shutdown requested")
                 os._exit(0)

@@ -50,6 +50,13 @@ class ResourceManager:
         with self._lock:
             return set(self._failed)
 
+    @property
+    def all_devices(self) -> tuple:
+        """Snapshot of the full inventory (free AND busy), in pool order —
+        what an elastic grow must not collide with when inventing handles."""
+        with self._lock:
+            return tuple(self._all)
+
     def __contains__(self, device) -> bool:
         """True while the device is part of this inventory (free OR busy);
         failed devices have left the inventory."""
@@ -115,10 +122,22 @@ class ResourceManager:
             self._free = [d for d in self._free if d not in self._failed]
 
     def add_devices(self, devices: Sequence):
-        """Elastic grow."""
+        """Elastic grow.  Handles already in the inventory are skipped, so
+        replaying a grow event against a pool that absorbed it (executor-side
+        AND session-side registration paths) stays idempotent — a duplicate
+        handle in ``_free`` would satisfy two allocations with one device.
+        An admitted handle is also cleared from the failed set: re-adding a
+        previously failed/retired device is a rehabilitation (the node came
+        back), and a handle left in ``_failed`` would be silently dropped by
+        ``release`` after its first lease — a permanent pool leak."""
         with self._lock:
-            self._all.extend(devices)
-            self._free.extend(devices)
+            known = set(self._all)
+            for d in devices:
+                if d not in known:
+                    self._all.append(d)
+                    self._free.append(d)
+                    self._failed.discard(d)
+                    known.add(d)
 
 
 class Pilot:

@@ -102,6 +102,10 @@ def plan(n: int, free: Sequence, topology: Optional[Topology] = None,
         raise ValueError(
             f"unknown placement policy {policy!r}; expected one of "
             f"{PLACEMENTS}")
+    if n > len(free):
+        # the pool normally checks under its lock; an elastic retire racing
+        # a direct plan() call must fail loudly, not silently under-allocate
+        raise ValueError(f"plan: want {n} devices, free list has {len(free)}")
     exclude = set(exclude)
     if policy == SPREAD or topology is None or topology.n_nodes <= 1:
         # the historical flat path (one node degenerates to it as well)

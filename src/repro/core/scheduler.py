@@ -25,7 +25,16 @@ The session is persistent: tasks may be submitted while others run
 (continuous DAG release, see ``core/pipeline.py``), and every lifecycle step
 is appended to a per-task event trace (``TraceEvent``: submit / dispatch /
 comm_build / done / fail / retry / speculate / cancel / device_failure /
-steal / return) consumed uniformly by the benchmarks and ``SimReport``.
+steal / return / grow / retire) consumed uniformly by the benchmarks and
+``SimReport``.
+
+The pool is elastic at runtime in BOTH directions on every backend: a
+``grow`` event (``ProcessExecutor.add_worker``, ``inject_grow`` on live
+executors, ``SimOptions.grow_at`` on the virtual clock) adds inventory and
+backfills pending work in the same scheduler step; a ``retire`` event
+(``ProcessExecutor.retire_worker``, ``inject_retire``, ``retire_at``)
+withdraws inventory gracefully — draining tasks keep their devices until
+they finish, the devices just never return to the free list.
 
 Placement (``core/placement.py``) makes dispatch topology-aware: the core
 asks the executor for its :class:`Topology` (node -> device handles) and
@@ -93,14 +102,15 @@ def interleave_by_pipeline(tasks):
 class TraceEvent:
     t: float          # executor clock (virtual seconds or perf_counter)
     kind: str         # submit|dispatch|comm_build|done|fail|retry|speculate|
-                      # cancel|device_failure|steal|return
+                      # cancel|device_failure|steal|return|grow|retire
     task: str = ""    # task name ("" for pool-level events)
     uid: int = -1
     pipeline: str = ""
     ranks: int = 0
     value: float = 0.0   # kind-specific payload (comm_build: seconds;
                          # device_failure: #devices lost; steal/return:
-                         # #devices leased across partitions / handed back)
+                         # #devices leased across partitions / handed back;
+                         # grow/retire: #devices joining/leaving the pool)
     p2p: float = 0.0     # comm-stats evidence on terminal done/fail events:
                          # bytes the task's collectives moved worker-to-
                          # worker.  The process executor reports real bytes;
@@ -541,15 +551,60 @@ class SchedulerSession:
                     # releases the devices in _handle
                     self._ignored.add(r.uid)
 
+    def _grow_pool(self) -> ResourceManager:
+        """Where grown inventory lands: the shared pool (HETEROGENEOUS), or
+        the parent pool under BATCH — the static partitions stay exactly as
+        declared, so new devices are parent leftovers until a future session
+        repartitions over them."""
+        if self._pools and _SHARED in self._pools:
+            return self._pools[_SHARED]
+        return self.rm
+
+    def _invent_devices(self, n: int) -> tuple:
+        """Anonymous grow (virtual-clock injection): invent ``n`` fresh
+        handles that cannot collide with live, busy, or previously failed
+        inventory — an all-int pool (the sim's rank ids) keeps growing the
+        integer range so ``SimOptions.devices_per_node`` topologies stay
+        well-defined on the new devices."""
+        known = set(self.rm.all_devices) | self.rm.failed_devices
+        for pool in (self._pools or {}).values():
+            known |= set(pool.all_devices) | pool.failed_devices
+        if known and all(isinstance(d, int) for d in known):
+            base = max(known) + 1
+            return tuple(range(base, base + n))
+        out, i = [], 0
+        while len(out) < n:
+            h = f"grown{i}"
+            if h not in known:
+                out.append(h)
+            i += 1
+        return tuple(out)
+
     def _handle(self, ev: ExecEvent) -> list[Task]:
         now = self.executor.now()
-        if ev.kind == "device_failure":
+        if ev.kind == "grow":
+            # elastic grow: the executor (ProcessExecutor.add_worker /
+            # inject_grow) names the exact joining handles; the virtual
+            # clock's grow_at injection leaves them anonymous and the core
+            # invents fresh ones.  Pending work becomes feasible in the SAME
+            # scheduler step: _dispatch runs before this event returns.
+            devs = tuple(ev.devices) or self._invent_devices(ev.n_devices)
+            pool = self._grow_pool()
+            fresh = [d for d in devs if d not in pool]
+            pool.add_devices(fresh)
+            self._tr("grow", value=float(len(fresh)))
+            self._dispatch()
+            return []
+        if ev.kind in ("device_failure", "retire"):
             if ev.devices:
-                # targeted failure (process executor: a crashed worker's
-                # exact inventory dies, busy or free).  Partition pools are
-                # checked first; in BATCH the rounding leftovers live in the
-                # parent pool.  Busy dead devices stay marked failed, so the
-                # release() in their task's fail event is a no-op.
+                # targeted (process executor: a crashed worker's exact
+                # inventory dies, or a retiring worker's inventory stops
+                # being leased — busy or free).  Partition pools are checked
+                # first; in BATCH the rounding leftovers live in the parent
+                # pool.  Busy departed devices stay marked failed, so the
+                # release() in their task's terminal event is a no-op — a
+                # draining retire lets the task finish, but its devices
+                # never return to the free list.
                 pools = list(self._pools.values()) if self._pools else []
                 if self.rm not in pools:
                     pools.append(self.rm)
@@ -564,11 +619,12 @@ class SchedulerSession:
             else:
                 # anonymous shrink (virtual-clock injection): lose up to
                 # n_devices arbitrary FREE devices
-                pool = max(self._pools.values(), key=lambda p: p.n_free)
+                pool = max((self._pools or {_SHARED: self.rm}).values(),
+                           key=lambda p: p.n_free)
                 n = min(ev.n_devices, pool.n_free)
                 if n:
                     pool.fail_devices(pool.allocate(n))
-            self._tr("device_failure", value=float(n))   # devices LOST, which
+            self._tr(ev.kind, value=float(n))   # devices LOST/retired, which
             # may be fewer than requested when the pool is busy
             self._dispatch()
             return []

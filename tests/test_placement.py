@@ -1,6 +1,8 @@
 """Topology-aware placement layer: Topology reports, pack/spread policies,
-ResourceManager.allocate_placed, and the communicator fixes that ride along
-(sub() ValueError, _factor_shape degenerate-axis normalization)."""
+ResourceManager.allocate_placed, property-based invariants under CHANGING
+topologies (elastic grow/retire reshapes the node map between calls), and
+the communicator fixes that ride along (sub() ValueError, _factor_shape
+degenerate-axis normalization)."""
 import pytest
 
 from repro.core import (
@@ -10,6 +12,7 @@ from repro.core import (
 )
 from repro.core.communicator import _factor_shape, degenerate_axes
 from repro.core.placement import plan
+from tests._hypothesis_compat import given, settings, st
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +93,105 @@ def test_plan_pack_spanning_avoids_excluded_devices():
 def test_plan_unknown_policy_raises():
     with pytest.raises(ValueError, match="unknown placement policy"):
         plan(1, [0, 1], policy="nearest")
+
+
+def test_plan_overdraw_raises():
+    """A plan over fewer free devices than requested (e.g. a direct call
+    racing an elastic retire) must fail loudly, never under-allocate."""
+    with pytest.raises(ValueError, match="want 3"):
+        plan(3, [0, 1], Topology({"w0": [0, 1]}), PACK)
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants: plan() under arbitrary / CHANGING topologies
+# (skip cleanly when hypothesis is not installed — tests/_hypothesis_compat)
+# ---------------------------------------------------------------------------
+#: arbitrary node -> device-count maps, like an elastic pilot's worker set
+_NODE_MAP = st.dictionaries(
+    st.sampled_from([f"w{i}" for i in range(6)]),
+    st.integers(min_value=1, max_value=5), min_size=1, max_size=5)
+
+
+def _devices_of(node_map):
+    return [(node, i) for node, k in sorted(node_map.items())
+            for i in range(k)]
+
+
+def _check_plan_invariants(n, free, topo, policy, exclude):
+    got = plan(n, list(free), topo, policy, exclude)
+    # exactness: n devices, all from the free list, no duplicates
+    assert len(got) == n
+    assert len(set(got)) == n
+    assert set(got) <= set(free)
+    clean = [d for d in free if d not in exclude]
+    if len(clean) >= n:
+        # the retry-with-exclusion contract: excluded devices are touched
+        # only when the clean ones cannot cover the request
+        assert not set(got) & set(exclude)
+    if policy == PACK:
+        # single-node guarantee: whenever ANY node can host all n ranks,
+        # pack never spans.  The exclusion contract outranks packing, so
+        # the fit is judged over the pool pack actually plans on: clean
+        # devices alone whenever they can cover the request
+        pool = clean if len(clean) >= n else free
+        if any(len(devs) >= n for devs in topo.group(pool).values()):
+            assert len(topo.group(got)) == 1
+    # determinism: placement is a pure function of its inputs
+    assert plan(n, list(free), topo, policy, exclude) == got
+    return got
+
+
+@settings(max_examples=60, deadline=None)
+@given(node_map=_NODE_MAP, data=st.data())
+def test_plan_invariants_hold_for_arbitrary_topologies(node_map, data):
+    devices = _devices_of(node_map)
+    topo = Topology({node: [d for d in devices if d[0] == node]
+                     for node in node_map})
+    free = data.draw(st.permutations(devices), label="free")
+    n = data.draw(st.integers(min_value=1, max_value=len(free)), label="n")
+    exclude = set(data.draw(st.lists(st.sampled_from(devices), unique=True),
+                            label="exclude"))
+    for policy in (SPREAD, PACK):
+        _check_plan_invariants(n, free, topo, policy, exclude)
+
+
+@settings(max_examples=40, deadline=None)
+@given(node_map=_NODE_MAP, data=st.data())
+def test_plan_invariants_survive_topology_changes_between_calls(node_map,
+                                                                data):
+    """The elastic scenario: allocate under one topology, then a node joins
+    (grow) and one drains away (retire) before the next allocation — the
+    invariants must hold for BOTH calls, including when the second free
+    list is missing the first call's devices and spans nodes the first
+    topology never knew."""
+    devices = _devices_of(node_map)
+    topo = Topology({node: [d for d in devices if d[0] == node]
+                     for node in node_map})
+    n1 = data.draw(st.integers(min_value=1, max_value=len(devices)),
+                   label="n1")
+    policy = data.draw(st.sampled_from([SPREAD, PACK]), label="policy")
+    taken = _check_plan_invariants(n1, devices, topo, policy, set())
+
+    # grow: a brand-new node joins; retire: one original node stops leasing
+    grown_k = data.draw(st.integers(min_value=1, max_value=4), label="grown")
+    grown = [("w9", i) for i in range(grown_k)]
+    retired = data.draw(st.sampled_from(sorted(node_map)), label="retired")
+    free2 = [d for d in devices
+             if d not in set(taken) and d[0] != retired] + grown
+    topo2 = Topology({**{node: [d for d in devices if d[0] == node]
+                         for node in node_map if node != retired},
+                      "w9": grown})
+    if not free2:
+        return
+    n2 = data.draw(st.integers(min_value=1, max_value=len(free2)),
+                   label="n2")
+    exclude2 = set(data.draw(st.lists(st.sampled_from(devices + grown),
+                                      unique=True), label="exclude2"))
+    got2 = _check_plan_invariants(n2, free2, topo2, policy, exclude2)
+    # nothing from the retired node (gone from the free list) nor from the
+    # first allocation can reappear
+    assert not {d for d in got2 if d[0] == retired}
+    assert not set(got2) & set(taken)
 
 
 # ---------------------------------------------------------------------------

@@ -515,6 +515,90 @@ def test_steal_return_trace_equivalence_includes_process_executor():
         {d.worker for d in by["a1"].devices}
 
 
+# ---------------------------------------------------------------------------
+# elastic grow/retire: one core, every backend carries the evidence
+# ---------------------------------------------------------------------------
+def _elastic_key_trace(report):
+    return _key_trace(report,
+                      kinds=("submit", "dispatch", "grow", "retire", "done"))
+
+
+def test_grow_trace_equivalence_sim_thread():
+    """An elastic grow must produce the identical event skeleton on the
+    virtual clock (``SimOptions.grow_at`` injection) and on live threads
+    (``inject_grow``) — grow handling lives in the core, not in any
+    executor: pool add, ``grow`` trace event, re-dispatch of pending work,
+    all in one scheduler step."""
+    specs = [("a", "p", 1.0), ("wide", "p", 3.0)]
+    descs_sim = [TaskDescription(name=n, ranks=r, fn=None,
+                                 duration_model=(lambda rk, d=dur: d),
+                                 tags={"pipeline": pipe})
+                 for (n, pipe, dur), r in zip(specs, (1, 2))]
+    sim = SchedulerSession(
+        VirtualClockExecutor(SimOptions(noise=0.0,
+                                        overhead_model=lambda r: 0.0,
+                                        grow_at=[(2.0, 2)])),
+        ResourceManager([0]))
+    rep_sim = sim.run(descs_sim)
+    assert sim.rm.total == 3          # invented handles joined the pool
+
+    ex = ThreadExecutor(build_comm=False, tick=0.01)
+    rm = ResourceManager(["d0"])
+    live = SchedulerSession(ex, rm, tick=0.01)
+    live.submit([TaskDescription(name="a", ranks=1,
+                                 fn=lambda c: time.sleep(0.05) or "a",
+                                 tags={"pipeline": "p"}),
+                 TaskDescription(name="wide", ranks=2, fn=lambda c: "w",
+                                 tags={"pipeline": "p"})])
+    got = live.wait_any(timeout=60)   # a finishes; wide cannot fit 1 device
+    assert [t.desc.name for t in got] == ["a"]
+    ex.inject_grow(["e0", "e1"])
+    rep_thr = live.drain(timeout=60).close()
+    assert rm.total == 3
+
+    assert all(t.state == TaskState.DONE for t in rep_sim.tasks)
+    assert all(t.state == TaskState.DONE for t in rep_thr.tasks)
+    assert _elastic_key_trace(rep_sim) == _elastic_key_trace(rep_thr)
+    # the acceptance property: the pending wide task dispatched in the SAME
+    # scheduler step that absorbed the grow
+    grow_t = next(e.t for e in rep_sim.trace if e.kind == "grow")
+    disp_t = next(e.t for e in rep_sim.trace
+                  if e.kind == "dispatch" and e.task == "wide")
+    assert disp_t == pytest.approx(grow_t)
+    assert next(e.value for e in rep_thr.trace if e.kind == "grow") == 2.0
+
+
+def test_retire_trace_equivalence_sim_thread():
+    """Graceful retire: free devices leave the pool without a
+    device_failure, running tasks keep theirs until done — identical
+    skeleton via ``retire_at`` (sim) and ``inject_retire`` (threads)."""
+    specs = [("a", "p", 3.0), ("b", "p", 1.0)]
+    sim = SchedulerSession(
+        VirtualClockExecutor(SimOptions(noise=0.0,
+                                        overhead_model=lambda r: 0.0,
+                                        retire_at=[(2.0, 1)])),
+        ResourceManager([0, 1]))
+    rep_sim = sim.run(_sim_descs(specs))
+    assert sim.rm.total == 1
+
+    ex = ThreadExecutor(build_comm=False, tick=0.01)
+    rm = ResourceManager(["d0", "d1"])
+    live = SchedulerSession(ex, rm, tick=0.01)
+    live.submit(_live_descs(specs, sleep_scale=0.1))
+    got = live.wait_any(timeout=60)           # b vacates d1
+    assert [t.desc.name for t in got] == ["b"]
+    ex.inject_retire(["d1"])
+    rep_thr = live.drain(timeout=60).close()
+    assert rm.total == 1 and "d0" in rm and "d1" not in rm
+
+    assert all(t.state == TaskState.DONE for t in rep_sim.tasks)
+    assert all(t.state == TaskState.DONE for t in rep_thr.tasks)
+    assert _elastic_key_trace(rep_sim) == _elastic_key_trace(rep_thr)
+    for rep in (rep_sim, rep_thr):
+        assert next(e.value for e in rep.trace if e.kind == "retire") == 1.0
+        assert not rep.events("device_failure") and not rep.events("fail")
+
+
 def test_same_core_reports_device_failure_trace():
     rep = simulate(
         [TaskDescription(name=f"t{i}", ranks=2, fn=None,
