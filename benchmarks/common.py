@@ -71,4 +71,5 @@ def trace_summary(report) -> dict:
         "p2p_bytes": sum(getattr(e, "p2p", 0.0)
                          for e in report.trace if e.kind in ("done", "fail")),
         "hub_calls": sum(getattr(t, "hub_calls", 0) for t in report.tasks),
+        "spills": sum(getattr(t, "spills", 0) for t in report.tasks),
     }

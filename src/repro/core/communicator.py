@@ -30,6 +30,7 @@ class Communicator:
     # reports the real counters under the same names
     p2p_bytes: int = 0            # bytes moved worker-to-worker
     hub_calls: int = 0            # parent-hub round-trips paid
+    spills: int = 0               # shuffle partitions spilled to disk
 
     @property
     def size(self) -> int:
@@ -44,7 +45,7 @@ class Communicator:
     def sub(self, axis: str):
         """Axis size lookup (MPI_Comm_size analogue per axis)."""
         try:
-            return dict(zip(self.axes, self.shape))[axis]
+            return dict(zip(self.axes, self.shape, strict=True))[axis]
         except KeyError:
             raise ValueError(
                 f"unknown mesh axis {axis!r}; this communicator has axes "

@@ -32,6 +32,8 @@ class ExecEvent:
     # worker-to-worker (process executor's peer data plane; identically 0
     # on the in-process and virtual backends — uniform trace evidence)
     hub_calls: int = 0             # parent-hub round-trips the task paid
+    spills: int = 0                # shuffle partitions the task spilled to
+    # disk (out-of-core shuffle evidence; 0 on sim/thread backends)
     n_devices: int = 0             # device_failure/grow/retire payload
     devices: tuple = ()            # device_failure/retire: the EXACT devices
     # lost or retired (empty -> the core shrinks the pool by n_devices

@@ -133,6 +133,7 @@ class _Tracker:
         self.p2p_bytes = 0                        # summed over parts: bytes
         self.hub_calls = 0                        # moved peer-to-peer / hub
         # round-trips paid — the comm-stats evidence on the terminal event
+        self.spills = 0                           # partitions spilled to disk
 
 
 class ProcessExecutor(QueueEventExecutor):
@@ -162,7 +163,8 @@ class ProcessExecutor(QueueEventExecutor):
                  env: Optional[dict] = None,
                  extra_pythonpath: Sequence[str] = (),
                  p2p: Optional[bool] = None,
-                 p2p_threshold: int = 1024):
+                 p2p_threshold: int = 1024,
+                 raw_frames: Optional[bool] = None):
         super().__init__()
         if isinstance(devices_per_worker, int):
             devices_per_worker = [devices_per_worker] * n_workers
@@ -180,6 +182,13 @@ class ProcessExecutor(QueueEventExecutor):
         self.p2p = (os.environ.get("REPRO_P2P", "1") != "0") \
             if p2p is None else p2p
         self.p2p_threshold = p2p_threshold
+        # raw-buffer peer framing (PEER_DATA_RAW) for the shuffle bucket
+        # exchange: None -> on unless REPRO_RAW_FRAMES=0 (the A/B knob the
+        # shuffle benchmark flips to measure pickled vs raw transport)
+        self.raw_frames = (os.environ.get("REPRO_RAW_FRAMES", "1") != "0") \
+            if raw_frames is None else raw_frames
+        self.spills = 0         # shuffle partitions spilled to disk, summed
+        # from the workers' PART_DONE accounting
         self.hub_calls = 0      # COLL round-trips served by this hub
         self.hub_relay_bytes = 0   # real payload bytes the hub relayed
         # (peer-mode collectives contribute only the tiny PEER_SENT marker)
@@ -288,8 +297,9 @@ class ProcessExecutor(QueueEventExecutor):
             wh.last_hb = _time.monotonic()
             # byte progress counts as liveness: heartbeats queue behind any
             # large in-flight frame on the same stream
-            chan.on_traffic = (lambda w=wh: setattr(
-                w, "last_hb", _time.monotonic()))
+            def _touch(w=wh):
+                w.last_hb = _time.monotonic()
+            chan.on_traffic = _touch
             pending.discard(wh.wid)
 
     def start(self) -> "ProcessExecutor":
@@ -598,7 +608,8 @@ class ProcessExecutor(QueueEventExecutor):
                     build_comm=self.build_comm,
                     placement=task.placement,
                     peer_addrs=peer_addrs,
-                    p2p_threshold=self.p2p_threshold)
+                    p2p_threshold=self.p2p_threshold,
+                    raw_frames=self.raw_frames)
             except ConnectionClosed:
                 # this part (and the never-launched rest) can't run; parts
                 # already launched on other workers complete the tracker
@@ -680,7 +691,7 @@ class ProcessExecutor(QueueEventExecutor):
     def _part_terminal(self, tracker: _Tracker, part: int,
                        error: Optional[str] = None, result=None,
                        comm_s: float = 0.0, p2p_bytes: int = 0,
-                       hub_calls: int = 0):
+                       hub_calls: int = 0, spills: int = 0):
         """Record one part's fate; the task's single terminal ExecEvent is
         delivered only when EVERY part is accounted for (result, error, or
         hosted on a dead worker)."""
@@ -692,7 +703,9 @@ class ProcessExecutor(QueueEventExecutor):
             tracker.comm_build_s = max(tracker.comm_build_s, comm_s)
             tracker.p2p_bytes += p2p_bytes
             tracker.hub_calls += hub_calls
+            tracker.spills += spills
             self.p2p_bytes += p2p_bytes
+            self.spills += spills
             first_error = error is not None and tracker.error is None
             if first_error:
                 tracker.error = error
@@ -711,7 +724,8 @@ class ProcessExecutor(QueueEventExecutor):
                                   error=tracker.error,
                                   comm_build_s=tracker.comm_build_s,
                                   p2p_bytes=tracker.p2p_bytes,
-                                  hub_calls=tracker.hub_calls))
+                                  hub_calls=tracker.hub_calls,
+                                  spills=tracker.spills))
         else:
             # results stay as bytes until poll(): deserializing a large
             # result here would stall this reader thread past hb_timeout
@@ -720,7 +734,8 @@ class ProcessExecutor(QueueEventExecutor):
                                   result=_RawResult(tracker.results[0]),
                                   comm_build_s=tracker.comm_build_s,
                                   p2p_bytes=tracker.p2p_bytes,
-                                  hub_calls=tracker.hub_calls))
+                                  hub_calls=tracker.hub_calls,
+                                  spills=tracker.spills))
 
     def _fail_all_parts(self, tracker: _Tracker, error: str):
         """Abort a launch that never (fully) reached the workers."""
@@ -736,7 +751,8 @@ class ProcessExecutor(QueueEventExecutor):
         self._part_terminal(tracker, d["part"], error=d["error"],
                             result=d["result"], comm_s=d["comm_build_s"],
                             p2p_bytes=d.get("p2p_bytes", 0),
-                            hub_calls=d.get("hub_calls", 0))
+                            hub_calls=d.get("hub_calls", 0),
+                            spills=d.get("spills", 0))
 
     def _coll_contribution(self, sender: _WorkerHandle, d: dict):
         uid, attempt, seq = d["uid"], d["attempt"], d["seq"]

@@ -20,7 +20,7 @@ worker -> parent:
   HEARTBEAT  {worker, t}                               liveness
   PART_DONE  {uid, attempt, part, result: bytes|None, error: str|None,
               comm_build_s, p2p_bytes, hub_calls,
-              p2p_fallbacks}                           one part finished
+              p2p_fallbacks, spills}                   one part finished
   COLL       {uid, attempt, seq, part, payload: bytes} collective contribution
 
 parent -> worker:
@@ -28,7 +28,7 @@ parent -> worker:
               global_ranks: [int], world_size, payload: bytes,
               mesh_axes, mesh_shape, build_comm,
               peer_addrs: [(worker, host, port)|None],
-              p2p_threshold}                           run one task part;
+              p2p_threshold, raw_frames}               run one task part;
               peer_addrs is the full address book of the task's parts so
               large collective payloads can move worker-to-worker
   COLL_RESULT {uid, attempt, seq, values: [bytes]}     gathered contributions
@@ -47,6 +47,15 @@ worker -> worker (peer data plane, same framing on the data port):
   PEER_DATA  {uid, attempt, seq, part, payload: bytes} one part's collective
               payload, shipped directly to a peer — the hub sees only the
               PEER_SENT placeholder for it
+  PEER_DATA_RAW {uid, attempt, seq, part, nbytes,
+              cols: [(name, dtype, shape), ...]}       raw-buffer framing:
+              the pickled header above is followed by ``nbytes`` of raw
+              array bytes ON THE SAME STREAM (the columns' contiguous
+              buffers, concatenated in ``cols`` order).  The payload never
+              passes through pickle on either side — the sender writes the
+              arrays' memoryviews straight to the socket and the receiver
+              reconstructs zero-copy views with ``np.frombuffer`` — which
+              is what makes MB-scale shuffle buckets cheap to ship.
 """
 from __future__ import annotations
 
@@ -67,6 +76,11 @@ PEERS_UPDATE = "peers_update"
 SHUTDOWN = "shutdown"
 PEER_HELLO = "peer_hello"
 PEER_DATA = "peer_data"
+PEER_DATA_RAW = "peer_data_raw"
+
+#: frame kinds whose pickled header is followed by ``nbytes`` of raw body
+#: bytes on the same stream (read by ``Channel.recv`` into ``payload``)
+RAW_BODY_KINDS = frozenset({PEER_DATA_RAW})
 
 #: Placeholder a part sends the hub instead of its payload when the payload
 #: already went worker-to-worker over the peer data plane.  Real payloads are
@@ -104,6 +118,24 @@ class Channel:
             except OSError as e:
                 raise ConnectionClosed(str(e)) from e
 
+    def send_raw(self, kind: str, bufs, **data):
+        """Send a raw-body frame: the pickled ``(kind, data)`` header (with
+        ``nbytes`` filled in) followed by every buffer in ``bufs`` written
+        straight to the socket — no pickle round-trip for the body.  The
+        buffers must stay alive/unmutated for the duration of the call;
+        ``kind`` must be in :data:`RAW_BODY_KINDS` so the receiver knows to
+        read the body."""
+        views = [memoryview(b).cast("B") for b in bufs]
+        data["nbytes"] = sum(v.nbytes for v in views)
+        frame = pickle.dumps((kind, data), protocol=pickle.HIGHEST_PROTOCOL)
+        with self._send_lock:
+            try:
+                self.sock.sendall(_LEN.pack(len(frame)) + frame)
+                for v in views:
+                    self.sock.sendall(v)
+            except OSError as e:
+                raise ConnectionClosed(str(e)) from e
+
     def _recv_exact(self, n: int) -> bytes:
         chunks = []
         while n:
@@ -120,11 +152,19 @@ class Channel:
         return b"".join(chunks)
 
     def recv(self):
-        """Blocking read of the next ``(kind, data)`` frame."""
+        """Blocking read of the next ``(kind, data)`` frame.  A raw-body
+        frame's trailing bytes are read off the stream here and attached as
+        ``data["payload"]`` — the framing stays self-delimiting either way."""
         (n,) = _LEN.unpack(self._recv_exact(_LEN.size))
         if n > MAX_FRAME:
             raise ConnectionClosed(f"oversized frame ({n} bytes)")
-        return pickle.loads(self._recv_exact(n))
+        kind, data = pickle.loads(self._recv_exact(n))
+        if kind in RAW_BODY_KINDS:
+            nbytes = data.get("nbytes", 0)
+            if nbytes > MAX_FRAME:
+                raise ConnectionClosed(f"oversized raw body ({nbytes} bytes)")
+            data["payload"] = self._recv_exact(nbytes)
+        return kind, data
 
     def close(self):
         try:

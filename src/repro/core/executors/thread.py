@@ -20,6 +20,7 @@ class StubComm:
     placement: str = ""          # policy that placed the devices (pack|spread)
     p2p_bytes: int = 0           # uniform comm-stats surface: an in-process
     hub_calls: int = 0           # comm never pays a hub or peer transfer
+    spills: int = 0              # nor spills shuffle partitions to disk
 
     @property
     def size(self) -> int:

@@ -167,6 +167,11 @@ class _PeerNet:
                 if kind == protocol.PEER_DATA:
                     self.put((d["uid"], d["attempt"], d["seq"], d["part"]),
                              d["payload"])
+                elif kind == protocol.PEER_DATA_RAW:
+                    # raw-buffer frame: park the whole header dict — it
+                    # carries the column metadata next to the raw bytes the
+                    # Channel already read off the stream
+                    self.put((d["uid"], d["attempt"], d["seq"], d["part"]), d)
         except (ConnectionClosed, OSError):
             chan.close()
 
@@ -269,6 +274,56 @@ class _PeerNet:
                 chan.close()
         return False
 
+    def send_raw(self, wid: str, addr: tuple, bufs, **fields) -> bool:
+        """Ship one PEER_DATA_RAW frame (header + raw buffer bytes, no
+        pickle of the body) to worker ``wid``; True on success.  Same
+        cached-channel + one-fresh-retry policy as :meth:`send`."""
+        for fresh in (False, True):
+            chan = self._channel(wid, addr, fresh=fresh)
+            if chan is None:
+                continue
+            try:
+                chan.send_raw(protocol.PEER_DATA_RAW, bufs, **fields)
+                return True
+            except ConnectionClosed:
+                with self._out_lock:
+                    if self._out.get(wid) is chan:
+                        del self._out[wid]
+                chan.close()
+        return False
+
+
+def _encode_cols(chunk: dict):
+    """Wire form of a column-dict for a raw peer frame: ``(metas, bufs)``
+    where ``metas`` is ``[(name, dtype_str, shape), ...]`` (pickled in the
+    frame header) and ``bufs`` the matching C-contiguous arrays whose bytes
+    follow the header verbatim.  Column order is sorted-by-name so both
+    sides agree without shipping an ordering."""
+    import numpy as np
+    metas, bufs = [], []
+    for name in sorted(chunk):
+        a = np.ascontiguousarray(chunk[name])
+        metas.append((name, a.dtype.str, a.shape))
+        bufs.append(a)
+    return metas, bufs
+
+
+def _decode_cols(metas, payload: bytes) -> dict:
+    """Inverse of :func:`_encode_cols`: zero-copy ``np.frombuffer`` views
+    into ``payload``.  The views are read-only (they alias the received
+    bytes) — callers that mutate must copy first."""
+    import numpy as np
+    out, off = {}, 0
+    for name, dtype, shape in metas:
+        dt = np.dtype(dtype)
+        count = 1
+        for s in shape:
+            count *= int(s)
+        out[name] = np.frombuffer(payload, dt, count=count,
+                                  offset=off).reshape(shape)
+        off += dt.itemsize * count
+    return out
+
 
 class ProcTaskComm:
     """The communicator a payload receives under :class:`ProcessExecutor`.
@@ -300,7 +355,7 @@ class ProcTaskComm:
                  cancelled: Optional[threading.Event] = None,
                  placement: str = "", peer_net: Optional[_PeerNet] = None,
                  peer_addrs: Optional[list] = None,
-                 p2p_threshold: int = 1024):
+                 p2p_threshold: int = 1024, raw_frames: bool = True):
         self.uid = uid
         self.attempt = attempt
         self.world_size = world_size
@@ -318,6 +373,11 @@ class ProcTaskComm:
         # sender; sim/thread comms expose the same field as a constant 0)
         self.p2p_fallbacks = 0       # above-threshold payloads that had to
         # relay through the hub because a peer channel could not be used
+        self.spills = 0              # shuffle partitions a payload spilled to
+        # disk on this part (incremented by the payload via SpillBuffer;
+        # sim/thread comms expose the same field as a constant 0)
+        self.raw_frames = raw_frames  # PEER_DATA_RAW enabled (knob for A/B
+        # benchmarking against the pickled PEER_DATA path)
         self._hub = hub
         self._seq = 0
         self._coll_timeout = coll_timeout
@@ -425,6 +485,72 @@ class ProcTaskComm:
             abort=lambda: ("task cancelled" if self.cancelled.is_set()
                            else self._hub.dead_error(self.uid, self.attempt)))
 
+    def all_to_all_arrays(self, chunks: list) -> list:
+        """Personalized all-to-all of numpy column chunks — the shuffle
+        bucket exchange.  ``chunks[j]`` (a dict name -> contiguous ndarray)
+        is destined for part ``j``; returns ``n_parts`` dicts where entry
+        ``i`` is what part ``i`` sent HERE.
+
+        Transport: each destination's chunk ships as ONE ``PEER_DATA_RAW``
+        frame — pickled dtype/shape header followed by the columns' raw
+        bytes, no pickle round-trip for the body (the dominant cost of the
+        pickled path at MB scale).  The control :meth:`allgather` below is
+        the per-exchange barrier; a destination whose raw send failed (peer
+        unreachable, raw framing disabled, peer plane down) falls back PER
+        PAYLOAD to riding that control frame as a plain pickled chunk, so
+        mixed outcomes cannot deadlock.  Received raw columns are read-only
+        ``np.frombuffer`` views — copy before mutating in place."""
+        import numpy as np
+        if len(chunks) != self.n_parts:
+            raise ValueError(f"all_to_all_arrays: {len(chunks)} chunks for "
+                             f"{self.n_parts} parts")
+        raw = "__raw__"              # control marker: "await the peer frame"
+        use_raw = self._peers_ok and self.raw_frames
+        # claim a private seq for the raw frames: both the sender's frame key
+        # and the receiver's take() derive it from the SAME lockstep counter
+        # the control allgather advances, so no extra coordination is needed
+        raw_seq, control = self._seq, [None] * self.n_parts
+        for j in range(self.n_parts):
+            if j == self.part:
+                continue
+            sent = False
+            if use_raw:
+                metas, bufs = _encode_cols(chunks[j])
+                wid, host, port = self._peer_addrs[j]
+                sent = self._peer_net.send_raw(
+                    wid, (host, port), bufs, uid=self.uid,
+                    attempt=self.attempt, seq=raw_seq, part=self.part,
+                    cols=metas)
+                if sent:
+                    self.p2p_bytes += sum(b.nbytes for b in bufs)
+            if sent:
+                control[j] = raw
+            else:
+                if use_raw:
+                    self.p2p_fallbacks += 1
+                control[j] = chunks[j]   # pickled fallback on the barrier
+        self._seq += 1                   # consume raw_seq on every part,
+        # sends or not — the counters must stay lockstep across parts
+        gathered = self.allgather(control)
+        out = []
+        for i in range(self.n_parts):
+            if i == self.part:
+                # same copy semantics as allgather's local short-circuit:
+                # the returned chunk never aliases the caller's arrays
+                out.append({k: np.array(v) for k, v in chunks[i].items()})
+                continue
+            ctrl = gathered[i][self.part]
+            if isinstance(ctrl, str) and ctrl == raw:
+                d = self._peer_net.take(
+                    (self.uid, self.attempt, raw_seq, i), self._coll_timeout,
+                    abort=lambda: ("task cancelled" if self.cancelled.is_set()
+                                   else self._hub.dead_error(self.uid,
+                                                             self.attempt)))
+                out.append(_decode_cols(d["cols"], d["payload"]))
+            else:
+                out.append(ctrl)
+        return out
+
     def barrier(self):
         self.allgather(None)
 
@@ -480,7 +606,8 @@ class Worker:
         def stats() -> dict:
             return {"p2p_bytes": comm.p2p_bytes if comm else 0,
                     "hub_calls": comm.hub_calls if comm else 0,
-                    "p2p_fallbacks": comm.p2p_fallbacks if comm else 0}
+                    "p2p_fallbacks": comm.p2p_fallbacks if comm else 0,
+                    "spills": comm.spills if comm else 0}
 
         try:
             devs = self._local_devices(d["local_devices"], d["build_comm"])
@@ -502,7 +629,8 @@ class Worker:
                                 placement=d.get("placement", ""),
                                 peer_net=self.peer_net,
                                 peer_addrs=d.get("peer_addrs"),
-                                p2p_threshold=d.get("p2p_threshold", 1024))
+                                p2p_threshold=d.get("p2p_threshold", 1024),
+                                raw_frames=d.get("raw_frames", True))
             fn, args, kwargs = serialize.loads(d["payload"])
             res = fn(comm, *args, **kwargs)
             self.chan.send(protocol.PART_DONE, uid=uid, attempt=attempt,

@@ -108,7 +108,7 @@ def run_pipelines(pipelines: Sequence[Pipeline], resource_manager,
                 args=dep_vals, kwargs=st.kwargs, mesh_axes=st.mesh_axes,
                 priority=st.priority, duration_model=st.duration_model,
                 tags={"pipeline": key[0]}))
-        for key, task in zip(ready, sess.submit(descs)):
+        for key, task in zip(ready, sess.submit(descs), strict=True):
             key_of[task.uid] = key
             submitted.add(key)
 

@@ -115,6 +115,8 @@ class TraceEvent:
                          # bytes the task's collectives moved worker-to-
                          # worker.  The process executor reports real bytes;
                          # sim/thread backends report 0 — same schema.
+    spills: float = 0.0  # shuffle partitions the task spilled to disk
+                         # (out-of-core shuffle evidence, same schema rule)
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -191,13 +193,14 @@ class SchedulerSession:
 
     # -- trace ------------------------------------------------------------
     def _tr(self, kind: str, task: Optional[Task] = None, t: Optional[float] = None,
-            value: float = 0.0, p2p: float = 0.0):
+            value: float = 0.0, p2p: float = 0.0, spills: float = 0.0):
         self.trace.append(TraceEvent(
             t=self.executor.now() if t is None else t, kind=kind,
             task=task.desc.name if task else "",
             uid=task.uid if task else -1,
             pipeline=task.desc.tags.get("pipeline", "default") if task else "",
-            ranks=task.desc.ranks if task else 0, value=value, p2p=p2p))
+            ranks=task.desc.ranks if task else 0, value=value, p2p=p2p,
+            spills=spills))
 
     # -- pools ------------------------------------------------------------
     def _ensure_pools(self, descs: Sequence[TaskDescription]):
@@ -639,6 +642,7 @@ class SchedulerSession:
         # data plane, real bytes/round-trips on the process executor
         task.p2p_bytes = ev.p2p_bytes
         task.hub_calls = ev.hub_calls
+        task.spills = ev.spills
         if task.uid in self._ignored:
             self._ignored.discard(task.uid)
             self._dispatch()   # live twin finished after cancel: reclaim only
@@ -657,7 +661,8 @@ class SchedulerSession:
             # must not be cancelled or credited — just reclaim the devices
             task.state = TaskState.FAILED
             task.error = ev.error
-            self._tr("fail", task, p2p=float(ev.p2p_bytes))
+            self._tr("fail", task, p2p=float(ev.p2p_bytes),
+                     spills=float(ev.spills))
             self._dispatch()
             return []
 
@@ -674,7 +679,8 @@ class SchedulerSession:
             task.state = TaskState.FAILED
             task.error = ev.error
             task.end_time = now
-            self._tr("fail", task, p2p=float(ev.p2p_bytes))
+            self._tr("fail", task, p2p=float(ev.p2p_bytes),
+                     spills=float(ev.spills))
             # terminal: a still-running speculative duplicate must not flip
             # this task back to DONE later
             self._finished_uids.add(task.uid)
@@ -694,9 +700,11 @@ class SchedulerSession:
         target.result = ev.result
         target.p2p_bytes = ev.p2p_bytes
         target.hub_calls = ev.hub_calls
+        target.spills = ev.spills
         self._done_durations.setdefault(target.desc.name, []).append(
             now - target.start_time)
-        self._tr("done", target, p2p=float(ev.p2p_bytes))
+        self._tr("done", target, p2p=float(ev.p2p_bytes),
+                 spills=float(ev.spills))
         self._maybe_speculate()
         self._dispatch()
         return [target]

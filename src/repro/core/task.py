@@ -62,6 +62,8 @@ class Task:
     p2p_bytes: int = 0               # bytes the task's collectives moved
     # worker-to-worker (peer data plane; 0 on sim/thread backends)
     hub_calls: int = 0               # parent-hub round-trips the task paid
+    spills: int = 0                  # shuffle partitions spilled to disk
+    # under the out-of-core path (0 on sim/thread backends)
 
     @property
     def run_seconds(self) -> float:

@@ -26,6 +26,42 @@ from repro.dataframe import ops_local as L
 from repro.dataframe.table import Table
 
 
+class ShuffleOverflow(RuntimeError):
+    """A shuffle dropped rows: some rank's per-destination row count
+    exceeded its send-buffer capacity (``counts > send_cap``).  Carries the
+    structured context callers need to retry with more slack — or to switch
+    to the out-of-core path (``repro.dataframe.shuffle``), which has no
+    fixed send capacity at all."""
+
+    def __init__(self, op: str, slack: float):
+        self.op = op
+        self.slack = slack
+        super().__init__(
+            f"{op}: send buffer overflow (some rank's rows for one "
+            f"destination exceeded capacity * slack / n_parts with "
+            f"slack={slack}); retry with a larger slack= or use the "
+            f"out-of-core shuffle (repro.dataframe.shuffle)")
+
+
+def _checked(fn, op: str, slack: float, on_overflow: str):
+    """Wrap a jitted ``(table, ovf)`` op: ``on_overflow="return"`` keeps the
+    legacy pass-through; ``"raise"`` turns a True overflow flag into a
+    :class:`ShuffleOverflow` so it can never be silently dropped."""
+    if on_overflow not in ("return", "raise"):
+        raise ValueError(f"on_overflow={on_overflow!r} "
+                         "(expected 'return' or 'raise')")
+    if on_overflow == "return":
+        return fn
+
+    def wrapped(*args):
+        out, ovf = fn(*args)
+        if bool(ovf):
+            raise ShuffleOverflow(op, slack)
+        return out, ovf
+
+    return wrapped
+
+
 def _unit_nrows(t: Table) -> Table:
     """Inside shard_map each rank's nrows must be rank-1 (length 1) so the
     out_specs concatenation over the df axis yields a (P,) vector outside."""
@@ -84,8 +120,11 @@ def _shuffle_inside(table: Table, target, axis: str, slack: float):
     return out, comm.psum(overflow.astype(jnp.int32), axis) > 0
 
 
-def make_shuffle(mesh, axis: str = "df", slack: float = 2.0):
-    """Returns a jit'd shuffle(table, target) over the given mesh."""
+def make_shuffle(mesh, axis: str = "df", slack: float = 2.0,
+                 on_overflow: str = "return"):
+    """Returns a jit'd shuffle(table, target) over the given mesh.
+    ``on_overflow="raise"`` turns a dropped-rows overflow into a
+    :class:`ShuffleOverflow` instead of a flag callers may ignore."""
     spec = P(axis)
 
     @partial(jax.shard_map, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, P()),
@@ -94,7 +133,7 @@ def make_shuffle(mesh, axis: str = "df", slack: float = 2.0):
         out, ovf = _shuffle_inside(table, target, axis, slack)
         return _unit_nrows(out), ovf
 
-    return jax.jit(_shuf)
+    return _checked(jax.jit(_shuf), "shuffle", slack, on_overflow)
 
 
 # ---------------------------------------------------------------------------
@@ -117,7 +156,8 @@ def _dist_sort_inside(table: Table, key: str, axis: str, slack: float):
     return L.sort_by(shuffled, key), ovf
 
 
-def make_dist_sort(mesh, key: str, axis: str = "df", slack: float = 2.0):
+def make_dist_sort(mesh, key: str, axis: str = "df", slack: float = 2.0,
+                   on_overflow: str = "return"):
     spec = P(axis)
 
     @partial(jax.shard_map, mesh=mesh, in_specs=(spec,), out_specs=(spec, P()),
@@ -126,7 +166,7 @@ def make_dist_sort(mesh, key: str, axis: str = "df", slack: float = 2.0):
         out, ovf = _dist_sort_inside(table, key, axis, slack)
         return _unit_nrows(out), ovf
 
-    return jax.jit(_sort)
+    return _checked(jax.jit(_sort), "dist_sort", slack, on_overflow)
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +189,7 @@ def _dist_join_inside(left: Table, right: Table, key: str, axis: str,
 
 
 def make_dist_join(mesh, key: str, axis: str = "df", slack: float = 2.0,
-                   out_factor: float = 2.0):
+                   out_factor: float = 2.0, on_overflow: str = "return"):
     spec = P(axis)
 
     @partial(jax.shard_map, mesh=mesh, in_specs=(spec, spec),
@@ -158,14 +198,14 @@ def make_dist_join(mesh, key: str, axis: str = "df", slack: float = 2.0,
         out, ovf = _dist_join_inside(left, right, key, axis, slack, out_factor)
         return _unit_nrows(out), ovf
 
-    return jax.jit(_join)
+    return _checked(jax.jit(_join), "dist_join", slack, on_overflow)
 
 
 # ---------------------------------------------------------------------------
 # distributed groupby-sum
 # ---------------------------------------------------------------------------
 def make_dist_groupby_sum(mesh, key: str, value_cols, axis: str = "df",
-                          slack: float = 2.0):
+                          slack: float = 2.0, on_overflow: str = "return"):
     spec = P(axis)
 
     @partial(jax.shard_map, mesh=mesh, in_specs=(spec,), out_specs=(spec, P()),
@@ -177,7 +217,7 @@ def make_dist_groupby_sum(mesh, key: str, value_cols, axis: str = "df",
         shuffled, ovf = _shuffle_inside(table, tgt, axis, slack)
         return _unit_nrows(L.groupby_sum(shuffled, key, value_cols)), ovf
 
-    return jax.jit(_gb)
+    return _checked(jax.jit(_gb), "dist_groupby_sum", slack, on_overflow)
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ def ref_join_inner(left: dict, right: dict, key: str) -> dict:
     lo = np.searchsorted(rk_s, lk, side="left")
     hi = np.searchsorted(rk_s, lk, side="right")
     l_idx = np.repeat(np.arange(len(lk)), hi - lo)
-    r_idx = np.concatenate([r_order[a:b] for a, b in zip(lo, hi)]) \
+    r_idx = np.concatenate([r_order[a:b] for a, b in zip(lo, hi, strict=True)]) \
         if len(lk) else np.zeros((0,), np.int64)
     out = {}
     for k, v in left.items():

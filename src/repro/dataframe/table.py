@@ -26,7 +26,8 @@ class Table:
 
     @classmethod
     def tree_unflatten(cls, names, children):
-        return cls(columns=dict(zip(names, children[:-1])), nrows=children[-1])
+        return cls(columns=dict(zip(names, children[:-1], strict=True)),
+                   nrows=children[-1])
 
     # --- helpers ---
     @property

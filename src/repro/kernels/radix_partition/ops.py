@@ -15,6 +15,14 @@ def radix_partition(buckets, n_buckets: int, *, block: int = 1024,
     """buckets (n,) int32 -> (dest (n,), hist (n_buckets,)):
     row i belongs at global position dest[i] of the bucket-major layout."""
     n = buckets.shape[0]
+    if n_buckets == 1:
+        # degenerate single-bucket partition: the identity.  Short-circuit
+        # instead of launching the kernel — the (1,)-shaped hist output and
+        # VMEM scratch are below TPU lane tiling, and the pad-correction
+        # below would subtract the padded tail from the SAME bucket the real
+        # rows occupy (padding targets bucket n_buckets - 1, which here is
+        # also every real row's bucket).
+        return jnp.arange(n, dtype=jnp.int32), jnp.full((1,), n, jnp.int32)
     pad = (-n) % block if n >= block else block - n
     b = jnp.pad(buckets, (0, pad), constant_values=n_buckets - 1) if pad else buckets
     within2d, hist = radix_partition_kernel(b, n_buckets, block=block,

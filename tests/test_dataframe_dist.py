@@ -91,3 +91,59 @@ print("SHUFFLE_OK")
 def test_shuffle_conservation_and_placement():
     out = run_with_devices(SHUFFLE_SNIPPET, n_devices=4)
     assert "SHUFFLE_OK" in out
+
+
+OVERFLOW_SNIPPET = r"""
+import numpy as np, jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import build_communicator
+from repro.dataframe import ops_dist as D
+
+comm = build_communicator(jax.devices(), axes=("df",))
+rng = np.random.default_rng(11)
+n = 800
+# every row targets rank 0: each rank sends 200 rows to one destination,
+# but slack=1.0 gives send_cap = 400 * 1.0 // 4 + 8 = 108 < 200 — the
+# counts > send_cap overflow path actually trips
+data = {"k": np.zeros(n, np.int32),
+        "v": rng.normal(size=n).astype(np.float32)}
+t = D.shard_table(comm, data, capacity_per_rank=400)
+tj = jax.device_put(np.zeros(4 * 400, np.int32),
+                    NamedSharding(comm.mesh, P("df")))
+
+out, ovf = D.make_shuffle(comm.mesh, slack=1.0)(t, tj)
+assert bool(ovf), "overflow flag must trip when counts > send_cap"
+print("FLAG_OK")
+
+try:
+    D.make_shuffle(comm.mesh, slack=1.0, on_overflow="raise")(t, tj)
+except D.ShuffleOverflow as e:
+    assert e.op == "shuffle" and e.slack == 1.0
+    print("RAISE_OK")
+else:
+    raise AssertionError("on_overflow='raise' did not raise")
+
+# dist_join funnels both sides through the same packing stage
+try:
+    D.make_dist_join(comm.mesh, "k", slack=1.0, on_overflow="raise")(t, t)
+except D.ShuffleOverflow as e:
+    assert e.op == "dist_join"
+    print("JOIN_RAISE_OK")
+else:
+    raise AssertionError("dist_join on_overflow='raise' did not raise")
+
+# ample slack: same workload passes and returns ovf=False
+out, ovf = D.make_shuffle(comm.mesh, slack=4.0, on_overflow="raise")(t, tj)
+assert not bool(ovf)
+print("CLEAN_OK")
+"""
+
+
+@pytest.mark.integration
+def test_shuffle_overflow_is_observable():
+    """The counts > send_cap path: flag trips, on_overflow='raise' surfaces
+    a structured ShuffleOverflow from shuffle and dist_join, and ample
+    slack keeps the same workload clean."""
+    out = run_with_devices(OVERFLOW_SNIPPET, n_devices=4)
+    assert "FLAG_OK" in out and "RAISE_OK" in out
+    assert "JOIN_RAISE_OK" in out and "CLEAN_OK" in out

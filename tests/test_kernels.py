@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from tests._hypothesis_compat import given, settings, st
+
 from repro.kernels.bitonic_sort.ops import bitonic_sort
 from repro.kernels.bitonic_sort.ref import sort_ref
 from repro.kernels.flash_attention.ops import flash_attention
@@ -114,3 +116,30 @@ def test_radix_partition_is_stable():
     d = np.asarray(dest)
     assert d[1] < d[3]
     assert d[0] < d[2] < d[4]
+
+
+def test_radix_partition_single_bucket_is_identity():
+    """Degenerate 1-bucket case: the partition is the identity and the
+    pad-correction path must not mangle the histogram (padding targets
+    bucket n_buckets - 1 == 0, the same bucket every real row occupies)."""
+    for n in (1, 5, 64, 100, 129):
+        b = jnp.zeros((n,), jnp.int32)
+        dest, hist = radix_partition(b, 1, block=64, interpret=True)
+        np.testing.assert_array_equal(np.asarray(dest), np.arange(n))
+        np.testing.assert_array_equal(np.asarray(hist), [n])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=600),
+       st.integers(min_value=1, max_value=9),
+       st.sampled_from([16, 64, 128, 256]),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_radix_partition_matches_ref_property(n, buckets, block, seed):
+    """Property: dest/hist match ref.py bit-for-bit for arbitrary sizes,
+    including n < block, n % block != 0, and the 1-bucket degenerate case
+    (the pad-correction regression surface)."""
+    b = jax.random.randint(jax.random.key(seed), (n,), 0, buckets, jnp.int32)
+    dest, hist = radix_partition(b, buckets, block=block, interpret=True)
+    dref, href = destinations_ref(b, buckets)
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(href))
+    np.testing.assert_array_equal(np.asarray(dest), np.asarray(dref))

@@ -1,0 +1,380 @@
+"""Out-of-core shuffle: raw-buffer peer framing, the Pallas radix-bucket
+packing stage, spill-to-disk under REPRO_SHUFFLE_BUDGET, and streamed
+merges.
+
+Wire/engine units (no subprocesses) stay in tier-1; everything spawning
+worker interpreters — the raw-frame exchange, spill-vs-no-spill identity,
+and SIGKILL-mid-shuffle recovery — is ``integration`` and runs in both
+halves of the CI ``REPRO_P2P`` matrix.
+"""
+import signal
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ProcessExecutor, SchedulerSession, TaskDescription, TaskState,
+)
+from repro.core.executors import protocol
+from repro.core.executors.protocol import Channel
+from repro.core.executors.worker import _decode_cols, _encode_cols
+from repro.dataframe.shuffle import (
+    SpillBuffer, _gen_part, hash32, join_task, merge_join_sorted,
+    parse_budget, radix_bucket, sort_task,
+)
+
+
+# ---------------------------------------------------------------------------
+# wire-layer units: PEER_DATA_RAW framing (no subprocesses)
+# ---------------------------------------------------------------------------
+def _chan_pair():
+    a, b = socket.socketpair()
+    return Channel(a), Channel(b)
+
+
+def test_raw_frame_roundtrip_no_pickle_of_body():
+    """A PEER_DATA_RAW frame carries the column bytes verbatim after the
+    pickled header; the receiver reassembles identical arrays from the
+    stream with np.frombuffer (zero-copy views)."""
+    tx, rx = _chan_pair()
+    try:
+        cols = {"key": np.arange(1000, dtype=np.int32),
+                "v0": np.arange(1000, dtype=np.int64) * 3,
+                "f": np.linspace(0, 1, 1000, dtype=np.float32)}
+        metas, bufs = _encode_cols(cols)
+        tx.send_raw(protocol.PEER_DATA_RAW, bufs,
+                    uid=7, attempt=0, seq=3, part=1, cols=metas)
+        kind, d = rx.recv()
+        assert kind == protocol.PEER_DATA_RAW
+        assert d["uid"] == 7 and d["seq"] == 3 and d["part"] == 1
+        assert d["nbytes"] == sum(v.nbytes for v in cols.values())
+        got = _decode_cols(d["cols"], d["payload"])
+        assert set(got) == set(cols)
+        for k in cols:
+            assert got[k].dtype == cols[k].dtype
+            np.testing.assert_array_equal(got[k], cols[k])
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_raw_frame_interleaves_with_pickled_frames():
+    """Raw and pickled frames share one stream and stay self-delimiting:
+    pickled / raw / pickled in sequence all parse."""
+    tx, rx = _chan_pair()
+    try:
+        tx.send(protocol.PEER_DATA, uid=1, attempt=0, seq=0, part=0,
+                payload=b"x" * 100)
+        metas, bufs = _encode_cols({"k": np.arange(50, dtype=np.int32)})
+        tx.send_raw(protocol.PEER_DATA_RAW, bufs,
+                    uid=1, attempt=0, seq=1, part=0, cols=metas)
+        tx.send(protocol.PEER_DATA, uid=1, attempt=0, seq=2, part=0,
+                payload=b"y" * 7)
+        kinds = [rx.recv()[0] for _ in range(3)]
+        assert kinds == [protocol.PEER_DATA, protocol.PEER_DATA_RAW,
+                         protocol.PEER_DATA]
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_encode_decode_empty_and_2d_columns():
+    metas, bufs = _encode_cols({"a": np.zeros((0,), np.int32),
+                                "m": np.arange(12, dtype=np.float64
+                                               ).reshape(3, 4)})
+    payload = b"".join(memoryview(b).cast("B") for b in bufs)
+    got = _decode_cols(metas, payload)
+    assert got["a"].shape == (0,)
+    np.testing.assert_array_equal(got["m"],
+                                  np.arange(12, dtype=np.float64
+                                            ).reshape(3, 4))
+
+
+# ---------------------------------------------------------------------------
+# engine units: budget, bucketing, spill, merges (no subprocesses)
+# ---------------------------------------------------------------------------
+def test_parse_budget_suffixes():
+    assert parse_budget("32m") == 32 << 20
+    assert parse_budget("256K") == 256 << 10
+    assert parse_budget("1g") == 1 << 30
+    assert parse_budget("12345") == 12345
+    assert parse_budget(None, default=7) == 7
+    assert parse_budget("") == parse_budget(None)
+
+
+def test_radix_bucket_matches_mask_selection():
+    """Bucket-major chunks == per-bucket mask selection in original row
+    order (the kernel's stability), histogram == bincount; verify=True
+    additionally cross-checks dest/hist against ref.py bit-for-bit."""
+    rng = np.random.default_rng(0)
+    cols = {"key": rng.integers(0, 97, 3000, dtype=np.int32),
+            "v0": rng.integers(0, 1 << 30, 3000, dtype=np.int64)}
+    tgt = (hash32(cols["key"]) % np.uint32(5)).astype(np.int32)
+    chunks, hist = radix_bucket(cols, tgt, 5, block=256, verify=True)
+    assert [len(c["key"]) for c in chunks] == list(hist)
+    np.testing.assert_array_equal(hist, np.bincount(tgt, minlength=5))
+    for j, c in enumerate(chunks):
+        mask = tgt == j
+        np.testing.assert_array_equal(c["key"], cols["key"][mask])
+        np.testing.assert_array_equal(c["v0"], cols["v0"][mask])
+
+
+def test_radix_bucket_empty_input():
+    chunks, hist = radix_bucket({"key": np.zeros(0, np.int32)},
+                                np.zeros(0, np.int32), 4)
+    assert len(chunks) == 4 and all(len(c["key"]) == 0 for c in chunks)
+    assert list(hist) == [0, 0, 0, 0]
+
+
+def test_spillbuffer_threshold_crossing(tmp_path):
+    """Runs stay in memory under the budget and spill beyond it — the
+    crossing is observable via .spills and the spill files on disk."""
+    buf = SpillBuffer(10_000, "key", spill_dir=str(tmp_path))
+    small = {"key": np.arange(100, dtype=np.int32)}          # 400 B
+    buf.add(small)
+    assert buf.spills == 0 and len(list(tmp_path.iterdir())) == 0
+    big = {"key": np.arange(5000, dtype=np.int32)}           # 20 KB
+    buf.add(big)
+    assert buf.spills == 1 and len(list(tmp_path.iterdir())) == 1
+    buf.add(small)                                           # still under
+    assert buf.spills == 1
+    buf.close()
+
+
+def test_spillbuffer_merges_three_plus_spilled_runs():
+    """k-way merge of >= 3 spilled runs equals np.sort of the union, in
+    chunks far smaller than any run."""
+    rng = np.random.default_rng(1)
+    buf = SpillBuffer(0, "key")       # budget 0: every run spills
+    allk, allv = [], []
+    for _ in range(4):
+        r = {"key": rng.integers(0, 500, 1500, dtype=np.int32),
+             "v0": rng.integers(0, 9, 1500, dtype=np.int64)}
+        allk.append(r["key"])
+        allv.append(r["v0"])
+        buf.add(r)
+    assert buf.spills == 4
+    chunks = list(buf.merge_sorted(chunk_rows=113))
+    got_k = np.concatenate([c["key"] for c in chunks])
+    np.testing.assert_array_equal(got_k, np.sort(np.concatenate(allk)))
+    # value rows travel with their keys: per-key value multisets match
+    got_v = np.concatenate([c["v0"] for c in chunks])
+    ref = sorted(zip(np.concatenate(allk).tolist(),
+                     np.concatenate(allv).tolist()))
+    assert sorted(zip(got_k.tolist(), got_v.tolist())) == ref
+    buf.close()
+
+
+def test_merge_join_duplicates_across_chunk_boundaries():
+    """Streaming merge-join with heavy duplicate keys and chunk sizes that
+    force equal-key groups to straddle chunk boundaries."""
+    rng = np.random.default_rng(2)
+    lk = np.sort(rng.integers(0, 12, 400, dtype=np.int32))
+    rk = np.sort(rng.integers(0, 12, 300, dtype=np.int32))
+    lv = rng.integers(0, 1000, 400, dtype=np.int64)
+    rv = rng.integers(0, 1000, 300, dtype=np.int64)
+
+    def chunked(d, size):
+        for i in range(0, len(d["key"]), size):
+            yield {k: v[i:i + size] for k, v in d.items()}
+
+    out = list(merge_join_sorted(chunked({"key": lk, "v0": lv}, 7),
+                                 chunked({"key": rk, "w0": rv}, 5), "key"))
+    got = sorted(zip(np.concatenate([c["key"] for c in out]).tolist(),
+                     np.concatenate([c["v0"] for c in out]).tolist(),
+                     np.concatenate([c["w0"] for c in out]).tolist()))
+    ref = sorted((int(a), int(lv[i]), int(rv[j]))
+                 for i, a in enumerate(lk)
+                 for j, b in enumerate(rk) if a == b)
+    assert got == ref
+
+
+def test_merge_join_disjoint_sides_empty():
+    def one(d):
+        yield d
+    out = list(merge_join_sorted(
+        one({"key": np.array([1, 2], np.int32),
+             "v0": np.array([5, 6], np.int64)}),
+        one({"key": np.array([3, 4], np.int32),
+             "w0": np.array([7, 8], np.int64)}), "key"))
+    assert out == []
+
+
+class _LocalComm:
+    """Bare single-part comm stand-in (no executor)."""
+    spills = 0
+
+
+def test_sort_task_spill_vs_no_spill_identical():
+    base = {"rows_per_part": 6000, "seed": 9, "collect": True,
+            "verify_kernel": True}
+    spilled = sort_task(_LocalComm(), {**base, "budget": 4_000,
+                                       "chunk_rows": 333})
+    resident = sort_task(_LocalComm(), {**base, "budget": 1 << 30})
+    assert spilled["spills"] > 0 and resident["spills"] == 0
+    assert spilled["sorted"] and resident["sorted"]
+    assert spilled["n"] == resident["n"] == 6000
+    assert spilled["key_sum"] == resident["key_sum"]
+    np.testing.assert_array_equal(spilled["rows"]["key"],
+                                  resident["rows"]["key"])
+    np.testing.assert_array_equal(
+        spilled["rows"]["key"], np.sort(_gen_part(base, 0)["key"]))
+
+
+def test_join_task_spill_vs_no_spill_identical():
+    base = {"rows_per_part": 4000, "key_range": 700, "seed": 9,
+            "verify_kernel": True}
+    spilled = join_task(_LocalComm(), {**base, "budget": 3_000,
+                                       "chunk_rows": 257})
+    resident = join_task(_LocalComm(), {**base, "budget": 1 << 30})
+    assert spilled["spills"] > 0 and resident["spills"] == 0
+    for k in ("n", "key_sum", "v_sum", "w_sum"):
+        assert spilled[k] == resident[k], k
+
+
+def test_budget_env_knob(monkeypatch):
+    """REPRO_SHUFFLE_BUDGET drives spilling without a spec override."""
+    monkeypatch.setenv("REPRO_SHUFFLE_BUDGET", "2k")
+    spec = {"rows_per_part": 3000, "seed": 4}
+    out = sort_task(_LocalComm(), spec)
+    assert out["spills"] > 0 and out["sorted"]
+    monkeypatch.setenv("REPRO_SHUFFLE_BUDGET", "1g")
+    assert sort_task(_LocalComm(), spec)["spills"] == 0
+
+
+# ---------------------------------------------------------------------------
+# integration: 2+ worker exchange over the real data plane
+# ---------------------------------------------------------------------------
+def _numpy_ref_join(spec, n_parts):
+    L = {k: np.concatenate([_gen_part(spec, p, 0)[k]
+                            for p in range(n_parts)])
+         for k in ("key", "v0")}
+    rspec = dict(spec)
+    rspec["rows_per_part"] = spec.get("right_rows_per_part",
+                                      spec["rows_per_part"])
+    R = {k: np.concatenate([_gen_part(rspec, p, 1)[k]
+                            for p in range(n_parts)])
+         for k in ("key", "w0")}
+    ol = np.argsort(L["key"], kind="stable")
+    lk, lv = L["key"][ol], L["v0"][ol]
+    orr = np.argsort(R["key"], kind="stable")
+    rk, rv = R["key"][orr], R["w0"][orr]
+    lo = np.searchsorted(rk, lk, "left")
+    hi = np.searchsorted(rk, lk, "right")
+    counts = hi - lo
+    n = int(counts.sum())
+    li = np.repeat(np.arange(len(lk)), counts)
+    ri = lo[li] + (np.arange(n) - (np.cumsum(counts) - counts)[li])
+    m = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+    def s(a):
+        return int(np.add.reduce(a.astype(np.uint64), dtype=np.uint64) & m)
+
+    return {"n": n, "key_sum": s(lk[li]), "v_sum": s(lv[li]),
+            "w_sum": s(rv[ri])}
+
+
+@pytest.mark.integration
+def test_dist_sort_2workers_spills_and_matches_numpy():
+    """Tentpole acceptance: 2-worker out-of-core sample sort under a budget
+    smaller than the dataset — spill exercised, result equals np.sort of
+    the generated input, kernel verified against ref.py on the live path,
+    and the spill evidence lands on Task/ExecEvent/executor."""
+    spec = {"rows_per_part": 20_000, "seed": 3, "budget": 150_000,
+            "collect": True, "verify_kernel": True}
+    with ProcessExecutor(n_workers=2, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.3, tick=0.02) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="ooc_sort", ranks=2,
+                                        fn=sort_task, args=(spec,))],
+                       timeout=180)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE, task.error
+        res = task.result
+        assert res["sorted"] and res["n"] == 40_000
+        exp = np.sort(np.concatenate([_gen_part(spec, p)["key"]
+                                      for p in (0, 1)]))
+        np.testing.assert_array_equal(res["rows"]["key"], exp)
+        # dataset >> budget: the spill path ran, and the counter threads
+        # all the way through PART_DONE -> Task -> trace
+        assert res["spills"] > 0
+        assert task.spills == res["spills"] == ex.spills
+        done = [e for e in rep.trace if e.kind == "done"]
+        assert done and done[0].spills == float(task.spills)
+        if ex.p2p:
+            # bucket bytes moved worker-to-worker, not through the hub
+            assert task.p2p_bytes > 100_000
+            assert ex.hub_relay_bytes < task.p2p_bytes / 10
+
+
+@pytest.mark.integration
+def test_dist_join_2workers_matches_numpy_reference():
+    spec = {"rows_per_part": 12_000, "key_range": 3000, "seed": 5,
+            "budget": 100_000, "verify_kernel": True}
+    with ProcessExecutor(n_workers=2, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.3, tick=0.02) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="ooc_join", ranks=2,
+                                        fn=join_task, args=(spec,))],
+                       timeout=180)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE, task.error
+        ref = _numpy_ref_join(spec, 2)
+        for k in ("n", "key_sum", "v_sum", "w_sum"):
+            assert task.result[k] == ref[k], k
+        assert task.result["spills"] > 0
+
+
+@pytest.mark.integration
+def test_raw_frames_off_same_sort_result(monkeypatch):
+    """REPRO_RAW_FRAMES=0 (the A/B knob): the identical workload completes
+    over pickled frames with the identical result."""
+    monkeypatch.setenv("REPRO_RAW_FRAMES", "0")
+    spec = {"rows_per_part": 8000, "seed": 3, "budget": 60_000,
+            "collect": True}
+    with ProcessExecutor(n_workers=2, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.3, tick=0.02) as ex:
+        assert ex.raw_frames is False
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+        rep = sess.run([TaskDescription(name="ooc_sort", ranks=2,
+                                        fn=sort_task, args=(spec,))],
+                       timeout=180)
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE, task.error
+        exp = np.sort(np.concatenate([_gen_part(spec, p)["key"]
+                                      for p in (0, 1)]))
+        np.testing.assert_array_equal(task.result["rows"]["key"], exp)
+
+
+@pytest.mark.integration
+def test_sigkill_mid_shuffle_recovers_same_sorted_output():
+    """Kill-mid-shuffle recovery: SIGKILL a worker while its SpillBuffer
+    holds spilled buckets (the stall_s hook parks the part between spill
+    and merge).  The loss surfaces as the targeted device_failure, the
+    task retries with exclusion on the survivors, and — the input being
+    deterministic per (seed, part) — reproduces the identical sorted
+    output."""
+    spec = {"rows_per_part": 10_000, "seed": 13, "budget": 50_000,
+            "collect": True, "stall_s": 3.0}
+    with ProcessExecutor(n_workers=3, devices_per_worker=1, build_comm=False,
+                         heartbeat_interval=0.2, tick=0.02) as ex:
+        rm = ex.resource_manager()
+        sess = SchedulerSession(ex, rm, tick=0.02)
+        sess.submit([TaskDescription(name="victim", ranks=2, fn=sort_task,
+                                     args=(spec,), max_retries=2)])
+        time.sleep(1.2)      # parts are inside the stall, spills on disk
+        victims = {d.worker
+                   for t in sess.tasks for d in t.devices} or {"w0"}
+        ex.kill_worker(sorted(victims)[0], signal.SIGKILL)
+        rep = sess.drain(timeout=180).close()
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE, task.error
+        assert task.retries >= 1
+        assert len(rep.events("device_failure")) == 1
+        assert task.result["sorted"] and task.result["n"] == 20_000
+        exp = np.sort(np.concatenate([_gen_part(spec, p)["key"]
+                                      for p in (0, 1)]))
+        np.testing.assert_array_equal(task.result["rows"]["key"], exp)
+        assert task.result["spills"] > 0
