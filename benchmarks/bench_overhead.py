@@ -304,6 +304,70 @@ def p2p_compare(n_coll: int = 6, nbytes: int = 4 << 20):
     return rows
 
 
+def _trace_probe(comm, n_coll=8, compute_s=0.02):
+    # collective-heavy part with a realistic compute phase: the span volume
+    # (launch/deserialize/compute + one wait span per hub round-trip) is what
+    # the recorder pays for, the compute is what any real task amortizes it
+    # against — a pure-collective probe would measure JSONL cost against an
+    # empty denominator
+    import time as _t
+    for _ in range(n_coll):
+        if hasattr(comm, "allgather"):
+            comm.allgather(b"x" * 2048)
+    _t.sleep(compute_s)
+    return 0
+
+
+def trace_overhead(n_tasks: int = 12, repeats: int = 3):
+    """Flight-recorder cost (BENCH_TRACE=1): the SAME spanning workload run
+    with tracing off and with tracing on (spans + telemetry + JSONL
+    streaming), medians over ``repeats``.  The recorder's contract is
+    "cheap enough to leave on" — the acceptance bar is < 5% wall-time
+    overhead, recorded alongside the measurements in
+    ``benchmarks/artifacts/trace_overhead.json`` (the CI artifact)."""
+    import statistics
+    import tempfile
+
+    from repro.core import ProcessExecutor, SchedulerSession
+
+    def descs():
+        return [TaskDescription(name=f"probe{i}", ranks=2, fn=_trace_probe,
+                                tags={"pipeline": "bench"})
+                for i in range(n_tasks)]
+
+    rows = []
+    with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                         build_comm=False, tick=0.005,
+                         extra_pythonpath=[str(ROOT)]) as ex:
+        # warm-up: first dispatch per worker pays payload-import costs
+        SchedulerSession(ex, ex.resource_manager(),
+                         tick=0.005).run(descs()[:2], timeout=120)
+        tmp = tempfile.mkdtemp(prefix="repro-trace-bench-")
+        for mode, trace_path in (("off", None),
+                                 ("on", os.path.join(tmp, "bench.jsonl"))):
+            walls = []
+            for _ in range(repeats):
+                sess = SchedulerSession(ex, ex.resource_manager(),
+                                        tick=0.005, trace_path=trace_path)
+                rep = sess.run(descs(), timeout=120)
+                walls.append(rep.makespan)
+            rows.append({"mode": mode, "wall_s": statistics.median(walls),
+                         "n_tasks": n_tasks,
+                         "n_spans": len(rep.spans),
+                         "n_telemetry": len(rep.telemetry)})
+    overhead = rows[1]["wall_s"] / max(rows[0]["wall_s"], 1e-9) - 1.0
+    for r in rows:
+        emit(f"trace/{r['mode']}", r["wall_s"] * 1e6,
+             f"n_spans={r['n_spans']};n_telemetry={r['n_telemetry']}")
+    emit("trace/overhead_frac", overhead * 1e6,
+         "acceptance_bar=0.05;wall_on/wall_off-1")
+    out = {"rows": rows, "overhead_frac": overhead, "acceptance_bar": 0.05}
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "trace_overhead.json").write_text(
+        json.dumps(out, indent=2, default=str))
+    return out
+
+
 def run():
     res = {}
     if os.environ.get("BENCH_REAL", "1") == "1":
@@ -335,6 +399,9 @@ def run():
         # opt-in: runtime add_worker -> time-to-first-dispatch for pending
         # work that could not fit the initial inventory
         res["elastic"] = elastic_grow_latency()
+    if os.environ.get("BENCH_TRACE", "0") == "1" or "--trace" in sys.argv:
+        # opt-in: flight-recorder on/off A/B (spans + telemetry + JSONL)
+        res["trace"] = trace_overhead()
     return res
 
 

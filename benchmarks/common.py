@@ -51,7 +51,7 @@ def trace_summary(report) -> dict:
     waits = [e.t - submits[e.uid] for e in report.trace
              if e.kind == "dispatch" and e.uid in submits]
     comm = [e.value for e in report.trace if e.kind == "comm_build"]
-    return {
+    out = {
         "n_submit": kinds.get("submit", 0),
         "n_dispatch": kinds.get("dispatch", 0),
         "n_done": kinds.get("done", 0),
@@ -72,4 +72,19 @@ def trace_summary(report) -> dict:
                          for e in report.trace if e.kind in ("done", "fail")),
         "hub_calls": sum(getattr(t, "hub_calls", 0) for t in report.tasks),
         "spills": sum(getattr(t, "spills", 0) for t in report.tasks),
+        "p2p_fallbacks": sum(getattr(t, "p2p_fallbacks", 0)
+                             for t in report.tasks),
+        "hub_relay_bytes": sum(getattr(t, "hub_relay_bytes", 0)
+                               for t in report.tasks),
     }
+    # span-derived timing breakdown, present only when worker flight-recorder
+    # spans exist (process executor with instrumented workers, or a loaded
+    # trace of such a run); sim/thread reports simply omit the keys
+    spans = getattr(report, "spans", None) or ()
+    if spans:
+        from repro.obs.spans import WAIT_KINDS
+        out["compute_s"] = sum(s["t1"] - s["t0"] for s in spans
+                               if s["kind"] == "compute")
+        out["comm_wait_s"] = sum(s["t1"] - s["t0"] for s in spans
+                                 if s["kind"] in WAIT_KINDS)
+    return out

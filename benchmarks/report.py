@@ -24,7 +24,14 @@ def trace_gantt(report, width: int = 64) -> str:
     speculate) occupies ``ranks`` lanes until that task's done/fail/cancel/
     retry event frees them — the same assignment the ResourceManager made,
     modulo lane naming.  Returns a legend, one row per lane with its busy
-    fraction, and the overall utilization percentage."""
+    fraction, and the overall utilization percentage.
+
+    When the report carries worker flight-recorder spans (a process-executor
+    run, or a trace loaded from its JSONL), the heuristic lanes are replaced
+    by TRUE per-worker lanes with compute-vs-wait shading — see
+    :func:`_span_gantt`.  Span-less reports keep the heuristic path."""
+    if getattr(report, "spans", None):
+        return _span_gantt(report, width)
     events = sorted(report.trace, key=lambda e: e.t)
     if not events:
         return "(empty trace)"
@@ -91,6 +98,90 @@ def trace_gantt(report, width: int = 64) -> str:
                    f"{busy[ln] / span * 100:5.1f}%")
     util = sum(busy) / (n_lanes * span) * 100
     out += ["```", f"overall utilization: {util:.1f}%"]
+    return "\n".join(out)
+
+
+def _span_gantt(report, width: int = 64) -> str:
+    """Per-worker Gantt rendered from recorded flight-recorder spans: one
+    lane per (worker, concurrent part slot), compute shaded with the task's
+    legend letter, wait spans (``p2p_recv`` — blocked on a peer frame or a
+    hub collective) shaded ``~``, other local work (deserialize, comm_build,
+    spill/merge) shaded ``=``.  Unlike the heuristic event-stream path this
+    is measured occupancy, not inferred: idle gaps between spans stay
+    blank."""
+    from repro.obs.spans import WAIT_KINDS
+
+    spans = sorted(report.spans, key=lambda s: (s.get("worker", ""),
+                                                s["t0"], s["t1"]))
+    t0 = min(s["t0"] for s in spans)
+    t1 = max(s["t1"] for s in spans)
+    span = t1 - t0
+    if span <= 0:
+        return "(no occupancy to render)"
+
+    names = []
+    for s in spans:
+        n = s.get("task", "") or f"uid{s.get('uid', -1)}"
+        if n not in names:
+            names.append(n)
+    char_of = {n: _GANTT_CHARS[i % len(_GANTT_CHARS)]
+               for i, n in enumerate(names)}
+
+    # lane assignment: per worker, concurrent (uid, part) occupants get
+    # separate lanes (greedy earliest-start, lowest free lane)
+    by_worker: dict = {}
+    for s in spans:
+        by_worker.setdefault(s.get("worker", "worker"), []).append(s)
+    out = [f"trace gantt  (span {span:.3f}s, {len(by_worker)} workers, "
+           f"span-traced)",
+           "  ".join(f"{char_of[n]}={n}" for n in names),
+           "legend: letter=compute  ~=wait (p2p/hub)  ==other work", "```"]
+    total_busy = 0.0
+    n_lanes = 0
+    for wid in sorted(by_worker):
+        part_iv: dict = {}
+        for s in by_worker[wid]:
+            key = (s.get("uid", -1), s.get("part", 0))
+            lo, hi = part_iv.get(key, (s["t0"], s["t1"]))
+            part_iv[key] = (min(lo, s["t0"]), max(hi, s["t1"]))
+        lane_free: list = []
+        lane_of: dict = {}
+        for key, (lo, hi) in sorted(part_iv.items(), key=lambda kv: kv[1]):
+            for i, free_at in enumerate(lane_free):
+                if lo >= free_at:
+                    lane_free[i] = hi
+                    lane_of[key] = i
+                    break
+            else:
+                lane_of[key] = len(lane_free)
+                lane_free.append(hi)
+        rows = [["·"] * width for _ in lane_free]
+        busy = [0.0] * len(lane_free)
+        # paint coarse->fine so wait/other shading overlays the enclosing
+        # compute span rather than being hidden by it
+        order = {"compute": 0}
+        for s in sorted(by_worker[wid],
+                        key=lambda s: order.get(s["kind"], 1)):
+            key = (s.get("uid", -1), s.get("part", 0))
+            ln = lane_of[key]
+            if s["kind"] == "compute":
+                busy[ln] += s["t1"] - s["t0"]
+                ch = char_of[s.get("task", "") or f"uid{s.get('uid', -1)}"]
+            elif s["kind"] in WAIT_KINDS:
+                ch = "~"
+            else:
+                ch = "="
+            lo = int((s["t0"] - t0) / span * width)
+            hi = max(int((s["t1"] - t0) / span * width), lo + 1)
+            for c in range(lo, min(hi, width)):
+                rows[ln][c] = ch
+        for i, row in enumerate(rows):
+            out.append(f"{wid}.{i:<2d} |{''.join(row)}| "
+                       f"{busy[i] / span * 100:5.1f}%")
+        total_busy += sum(busy)
+        n_lanes += len(rows)
+    util = total_busy / (n_lanes * span) * 100 if n_lanes else 0.0
+    out += ["```", f"overall compute utilization: {util:.1f}%"]
     return "\n".join(out)
 
 

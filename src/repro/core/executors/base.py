@@ -23,7 +23,7 @@ from repro.core.task import Task
 @dataclasses.dataclass
 class ExecEvent:
     """What an executor delivers back to the scheduler core."""
-    kind: str                      # done|fail|tick|device_failure|grow|retire
+    kind: str        # done|fail|tick|device_failure|grow|retire|telemetry
     task: Optional[Task] = None
     result: Any = None
     error: Optional[str] = None
@@ -34,6 +34,18 @@ class ExecEvent:
     hub_calls: int = 0             # parent-hub round-trips the task paid
     spills: int = 0                # shuffle partitions the task spilled to
     # disk (out-of-core shuffle evidence; 0 on sim/thread backends)
+    p2p_fallbacks: int = 0         # above-threshold payloads that fell back
+    # to the hub relay (peer channel unusable)
+    hub_relay_bytes: int = 0       # real payload bytes the hub relayed for
+    # the task's collectives (control-only PEER_SENT frames excluded)
+    spans: list = dataclasses.field(default_factory=list)   # worker-side
+    # flight-recorder spans of a terminal event, already aligned into the
+    # parent clock: [{kind, t0, t1, worker, part, uid, task}, ...]; empty
+    # on sim/thread backends — same schema, empty section
+    worker: str = ""               # telemetry: reporting worker id
+    telemetry: Optional[dict] = None   # telemetry: the gauge/counter
+    # snapshot a HEARTBEAT frame carried (queue depth, RSS, spill bytes,
+    # peer channels, p2p_fallbacks), aligned timestamp under "t"
     n_devices: int = 0             # device_failure/grow/retire payload
     devices: tuple = ()            # device_failure/retire: the EXACT devices
     # lost or retired (empty -> the core shrinks the pool by n_devices

@@ -63,6 +63,7 @@ from repro.core.executors.base import ExecEvent, QueueEventExecutor
 from repro.core.executors.protocol import Channel, ConnectionClosed
 from repro.core.pilot import ResourceManager
 from repro.core.task import Task
+from repro.obs import spans as _spans
 
 
 class ProcDevice(NamedTuple):
@@ -91,6 +92,10 @@ class _WorkerHandle:
         self.data_addr: Optional[tuple] = None   # (host, port) of the
         # worker's peer-data listener, from its HELLO; None when the peer
         # plane is disabled — the parent's address book entries
+        self.clock_offset = 0.0   # parent perf_counter - worker perf_counter,
+        # established at HELLO receipt (the worker stamps ``perf_t`` when it
+        # sends); adding it shifts the worker's flight-recorder spans into
+        # the parent clock — pure addition, order and nesting preserved
 
     def log_tail(self, n: int = 2000) -> str:
         try:
@@ -134,6 +139,11 @@ class _Tracker:
         self.hub_calls = 0                        # moved peer-to-peer / hub
         # round-trips paid — the comm-stats evidence on the terminal event
         self.spills = 0                           # partitions spilled to disk
+        self.p2p_fallbacks = 0                    # hub-relay fallbacks paid
+        self.hub_relay_bytes = 0                  # payload bytes the hub
+        # relayed for this task (accumulated hub-side in _coll_contribution)
+        self.spans: list = []                     # worker flight-recorder
+        # spans, aligned into the parent clock — piggybacked per PART_DONE
 
 
 class ProcessExecutor(QueueEventExecutor):
@@ -156,7 +166,8 @@ class ProcessExecutor(QueueEventExecutor):
     def __init__(self, n_workers: int = 2,
                  devices_per_worker: Union[int, Sequence[int]] = 2,
                  build_comm: bool = True, tick: float = 0.05,
-                 heartbeat_interval: float = 0.5,
+                 heartbeat_interval: Optional[float] = None,
+                 heartbeat: Optional[float] = None,
                  heartbeat_timeout: Optional[float] = None,
                  start_timeout: float = 120.0,
                  python: str = sys.executable,
@@ -171,8 +182,17 @@ class ProcessExecutor(QueueEventExecutor):
         assert len(devices_per_worker) == n_workers
         self.build_comm = build_comm
         self.tick = tick
-        self.hb_interval = heartbeat_interval
-        self.hb_timeout = heartbeat_timeout or max(5 * heartbeat_interval, 2.0)
+        # heartbeat cadence: explicit arg (``heartbeat`` and its historical
+        # alias ``heartbeat_interval`` are equivalent) > REPRO_HEARTBEAT env
+        # > 0.5s.  The liveness timeout defaults to 5 intervals (floor 2s):
+        # a worker is declared hung only after missing that many consecutive
+        # beats, so raising the interval proportionally slows failure
+        # detection — set heartbeat_timeout explicitly to decouple them.
+        hb = heartbeat if heartbeat is not None else heartbeat_interval
+        if hb is None:
+            hb = float(os.environ.get("REPRO_HEARTBEAT", "0.5"))
+        self.hb_interval = hb
+        self.hb_timeout = heartbeat_timeout or max(5 * hb, 2.0)
         self.start_timeout = start_timeout
         self.python = python
         self.env_override = dict(env or {})
@@ -194,6 +214,8 @@ class ProcessExecutor(QueueEventExecutor):
         # (peer-mode collectives contribute only the tiny PEER_SENT marker)
         self.p2p_bytes = 0      # bytes moved worker-to-worker, summed from
         # the workers' PART_DONE accounting (the hub never sees these bytes)
+        self.p2p_fallbacks = 0  # above-threshold payloads that fell back to
+        # the hub relay, summed from the workers' PART_DONE accounting
         self._counts = list(devices_per_worker)
         self.workers: dict[str, _WorkerHandle] = {}
         self._running: dict[int, _Tracker] = {}
@@ -291,6 +313,12 @@ class ProcessExecutor(QueueEventExecutor):
             sock.settimeout(None)
             wh = self.workers[d["worker"]]
             wh.chan, wh.alive = chan, True
+            # clock alignment for the flight recorder: the worker stamped
+            # its perf_counter as it sent HELLO; the difference (which
+            # absorbs the one-way frame latency — microseconds on loopback)
+            # maps every span the worker ships into this process's clock
+            if d.get("perf_t") is not None:
+                wh.clock_offset = _time.perf_counter() - d["perf_t"]
             if d.get("data_port"):
                 wh.data_addr = (d.get("data_host") or "127.0.0.1",
                                 d["data_port"])
@@ -649,9 +677,18 @@ class ProcessExecutor(QueueEventExecutor):
                 return
             wh.last_hb = _time.monotonic()   # any traffic proves liveness
             if kind == protocol.PART_DONE:
-                self._part_done(d)
+                self._part_done(wh, d)
             elif kind == protocol.COLL:
                 self._coll_contribution(wh, d)
+            elif kind == protocol.HEARTBEAT and d.get("telemetry"):
+                # telemetry-carrying heartbeat: surface the gauge snapshot
+                # as an ExecEvent so the scheduler records a ``telemetry``
+                # trace event; stamped in the parent clock via the offset
+                rec = dict(d["telemetry"])
+                if d.get("perf_t") is not None:
+                    rec["t"] = d["perf_t"] + wh.clock_offset
+                self._q.put(ExecEvent("telemetry", worker=wh.wid,
+                                      telemetry=rec))
 
     def _monitor(self):
         while not self._closed:
@@ -691,7 +728,8 @@ class ProcessExecutor(QueueEventExecutor):
     def _part_terminal(self, tracker: _Tracker, part: int,
                        error: Optional[str] = None, result=None,
                        comm_s: float = 0.0, p2p_bytes: int = 0,
-                       hub_calls: int = 0, spills: int = 0):
+                       hub_calls: int = 0, spills: int = 0,
+                       p2p_fallbacks: int = 0, spans=()):
         """Record one part's fate; the task's single terminal ExecEvent is
         delivered only when EVERY part is accounted for (result, error, or
         hosted on a dead worker)."""
@@ -704,8 +742,11 @@ class ProcessExecutor(QueueEventExecutor):
             tracker.p2p_bytes += p2p_bytes
             tracker.hub_calls += hub_calls
             tracker.spills += spills
+            tracker.p2p_fallbacks += p2p_fallbacks
+            tracker.spans.extend(spans)
             self.p2p_bytes += p2p_bytes
             self.spills += spills
+            self.p2p_fallbacks += p2p_fallbacks
             first_error = error is not None and tracker.error is None
             if first_error:
                 tracker.error = error
@@ -725,7 +766,10 @@ class ProcessExecutor(QueueEventExecutor):
                                   comm_build_s=tracker.comm_build_s,
                                   p2p_bytes=tracker.p2p_bytes,
                                   hub_calls=tracker.hub_calls,
-                                  spills=tracker.spills))
+                                  spills=tracker.spills,
+                                  p2p_fallbacks=tracker.p2p_fallbacks,
+                                  hub_relay_bytes=tracker.hub_relay_bytes,
+                                  spans=list(tracker.spans)))
         else:
             # results stay as bytes until poll(): deserializing a large
             # result here would stall this reader thread past hb_timeout
@@ -735,14 +779,17 @@ class ProcessExecutor(QueueEventExecutor):
                                   comm_build_s=tracker.comm_build_s,
                                   p2p_bytes=tracker.p2p_bytes,
                                   hub_calls=tracker.hub_calls,
-                                  spills=tracker.spills))
+                                  spills=tracker.spills,
+                                  p2p_fallbacks=tracker.p2p_fallbacks,
+                                  hub_relay_bytes=tracker.hub_relay_bytes,
+                                  spans=list(tracker.spans)))
 
     def _fail_all_parts(self, tracker: _Tracker, error: str):
         """Abort a launch that never (fully) reached the workers."""
         for part in range(tracker.n_parts):
             self._part_terminal(tracker, part, error=error)
 
-    def _part_done(self, d: dict):
+    def _part_done(self, wh: _WorkerHandle, d: dict):
         with self._lock:
             tracker = self._running.get(d["uid"])
         if tracker is None or tracker.attempt != d["attempt"]:
@@ -752,7 +799,12 @@ class ProcessExecutor(QueueEventExecutor):
                             result=d["result"], comm_s=d["comm_build_s"],
                             p2p_bytes=d.get("p2p_bytes", 0),
                             hub_calls=d.get("hub_calls", 0),
-                            spills=d.get("spills", 0))
+                            spills=d.get("spills", 0),
+                            p2p_fallbacks=d.get("p2p_fallbacks", 0),
+                            spans=_spans.align(
+                                d.get("spans") or (), wh.clock_offset,
+                                worker=wh.wid, part=d["part"], uid=d["uid"],
+                                task=tracker.task.desc.name))
 
     def _coll_contribution(self, sender: _WorkerHandle, d: dict):
         uid, attempt, seq = d["uid"], d["attempt"], d["seq"]
@@ -760,13 +812,17 @@ class ProcessExecutor(QueueEventExecutor):
             # counter updates stay under the lock: += from concurrent
             # per-worker reader threads would drop updates
             self.hub_calls += 1
-            if d["payload"] != protocol.PEER_SENT:
-                self.hub_relay_bytes += len(d["payload"])
+            relayed = 0 if d["payload"] == protocol.PEER_SENT \
+                else len(d["payload"])
+            self.hub_relay_bytes += relayed
             tracker = self._running.get(uid)
             if tracker is None or tracker.delivered or \
                     tracker.attempt != attempt:
                 tracker = None
             else:
+                # only the hub sees relayed bytes, so the per-task evidence
+                # is accumulated here rather than on the workers' PART_DONE
+                tracker.hub_relay_bytes += relayed
                 entry = self._coll.setdefault((uid, attempt, seq), {})
                 entry[d["part"]] = d["payload"]
                 ready = len(entry) == tracker.n_parts

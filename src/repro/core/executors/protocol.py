@@ -14,13 +14,23 @@ failed attempt out of its successor.
 
 worker -> parent:
   HELLO      {worker, pid, n_devices, platform,
-              data_host, data_port}                    registration; the
+              data_host, data_port, perf_t}            registration; the
               data address is the worker's peer-data listener (None when
-              the peer plane is disabled) — the parent's address book
-  HEARTBEAT  {worker, t}                               liveness
+              the peer plane is disabled) — the parent's address book.
+              perf_t is the worker's perf_counter stamped at send time:
+              the parent derives this worker's clock offset from it, the
+              alignment every shipped span/telemetry timestamp rides on
+  HEARTBEAT  {worker, t, perf_t, telemetry}            liveness + the
+              worker's gauge/counter snapshot (queue depth, RSS, spill
+              bytes, peer channels, p2p_fallbacks) — the parent surfaces
+              it as a ``telemetry`` trace event at perf_t + clock offset
   PART_DONE  {uid, attempt, part, result: bytes|None, error: str|None,
               comm_build_s, p2p_bytes, hub_calls,
-              p2p_fallbacks, spills}                   one part finished
+              p2p_fallbacks, spills,
+              spans: [(kind, t0, t1), ...]}            one part finished;
+              spans are the part's flight-recorder sections in the
+              worker's clock, aligned and merged into the trace by the
+              parent
   COLL       {uid, attempt, seq, part, payload: bytes} collective contribution
 
 parent -> worker:

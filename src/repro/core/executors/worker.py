@@ -29,6 +29,8 @@ from typing import Optional
 from repro.core.executors import protocol, serialize
 from repro.core.executors.protocol import Channel, ConnectionClosed
 from repro.core.executors.thread import StubComm
+from repro.obs import metrics as _metrics
+from repro.obs import spans as _spans
 
 
 class CollectiveError(RuntimeError):
@@ -355,7 +357,8 @@ class ProcTaskComm:
                  cancelled: Optional[threading.Event] = None,
                  placement: str = "", peer_net: Optional[_PeerNet] = None,
                  peer_addrs: Optional[list] = None,
-                 p2p_threshold: int = 1024, raw_frames: bool = True):
+                 p2p_threshold: int = 1024, raw_frames: bool = True,
+                 registry=None):
         self.uid = uid
         self.attempt = attempt
         self.world_size = world_size
@@ -367,15 +370,14 @@ class ProcTaskComm:
         self.placement = placement   # policy that placed this task (pack|
         # spread); under pack a fitting task has n_parts == 1 and its
         # collectives below never touch the hub
-        self.hub_calls = 0           # parent-hub round-trips actually paid
-        self.p2p_bytes = 0           # payload bytes this part SENT over peer
-        # channels (each transferred byte is counted exactly once, by its
-        # sender; sim/thread comms expose the same field as a constant 0)
-        self.p2p_fallbacks = 0       # above-threshold payloads that had to
-        # relay through the hub because a peer channel could not be used
-        self.spills = 0              # shuffle partitions a payload spilled to
-        # disk on this part (incremented by the payload via SpillBuffer;
-        # sim/thread comms expose the same field as a constant 0)
+        # comm counters live in a part-local MetricsRegistry (chained to the
+        # worker-lifetime registry whose snapshot rides every heartbeat)
+        # rather than ad-hoc attributes; the attribute surface below —
+        # ``comm.spills += n`` — is preserved by properties whose setter
+        # feeds the delta through the registry, so payloads and the parent's
+        # telemetry always agree without double bookkeeping
+        self.metrics = registry if registry is not None \
+            else _metrics.MetricsRegistry()
         self.raw_frames = raw_frames  # PEER_DATA_RAW enabled (knob for A/B
         # benchmarking against the pickled PEER_DATA path)
         self._hub = hub
@@ -390,6 +392,48 @@ class ProcTaskComm:
         self._peers_ok = (peer_net is not None
                           and len(self._peer_addrs) == n_parts
                           and all(a is not None for a in self._peer_addrs))
+
+    # --- registry-backed comm counters (attribute surface preserved) -----
+    @property
+    def hub_calls(self) -> int:
+        """Parent-hub round-trips actually paid."""
+        return self.metrics.get("hub_calls")
+
+    @hub_calls.setter
+    def hub_calls(self, v: int):
+        self.metrics.set_counter("hub_calls", v)
+
+    @property
+    def p2p_bytes(self) -> int:
+        """Payload bytes this part SENT over peer channels (each transferred
+        byte is counted exactly once, by its sender; sim/thread comms expose
+        the same field as a constant 0)."""
+        return self.metrics.get("p2p_bytes")
+
+    @p2p_bytes.setter
+    def p2p_bytes(self, v: int):
+        self.metrics.set_counter("p2p_bytes", v)
+
+    @property
+    def p2p_fallbacks(self) -> int:
+        """Above-threshold payloads that had to relay through the hub
+        because a peer channel could not be used."""
+        return self.metrics.get("p2p_fallbacks")
+
+    @p2p_fallbacks.setter
+    def p2p_fallbacks(self, v: int):
+        self.metrics.set_counter("p2p_fallbacks", v)
+
+    @property
+    def spills(self) -> int:
+        """Shuffle partitions a payload spilled to disk on this part
+        (incremented by the payload via SpillBuffer; sim/thread comms expose
+        the same field as a constant 0)."""
+        return self.metrics.get("spills")
+
+    @spills.setter
+    def spills(self, v: int):
+        self.metrics.set_counter("spills", v)
 
     # --- Communicator-compatible surface (local ranks) -------------------
     @property
@@ -442,19 +486,22 @@ class ProcTaskComm:
             self._seq += 1
             return [serialize.loads(serialize.dumps(obj))]
         seq, self._seq = self._seq, self._seq + 1
+        rec = _spans.current_recorder()
         data = serialize.dumps(obj)
         hub_payload = data
         if self._peers_ok and len(data) > self.p2p_threshold:
-            sent = 0
-            for p, addr in enumerate(self._peer_addrs):
-                if p == self.part:
-                    continue
-                wid, host, port = addr
-                if not self._peer_net.send(wid, (host, port), uid=self.uid,
-                                           attempt=self.attempt, seq=seq,
-                                           part=self.part, payload=data):
-                    break
-                sent += 1
+            with rec.span("p2p_send"):
+                sent = 0
+                for p, addr in enumerate(self._peer_addrs):
+                    if p == self.part:
+                        continue
+                    wid, host, port = addr
+                    if not self._peer_net.send(wid, (host, port),
+                                               uid=self.uid,
+                                               attempt=self.attempt, seq=seq,
+                                               part=self.part, payload=data):
+                        break
+                    sent += 1
             # bytes already shipped to reachable peers are real peer-plane
             # traffic even when the remaining sends force a hub fallback
             self.p2p_bytes += sent * len(data)
@@ -466,8 +513,9 @@ class ProcTaskComm:
                 # end — correctness never depends on which copy is used
                 self.p2p_fallbacks += 1
         self.hub_calls += 1
-        values = self._hub.call(self.uid, self.attempt, seq, self.part,
-                                hub_payload, self._coll_timeout)
+        with rec.span("p2p_recv"):
+            values = self._hub.call(self.uid, self.attempt, seq, self.part,
+                                    hub_payload, self._coll_timeout)
         return [serialize.loads(self._resolve(j, v, seq, data))
                 for j, v in enumerate(values)]
 
@@ -480,10 +528,12 @@ class ProcTaskComm:
             return hub_value
         if part == self.part:
             return own_data
-        return self._peer_net.take(
-            (self.uid, self.attempt, seq, part), self._coll_timeout,
-            abort=lambda: ("task cancelled" if self.cancelled.is_set()
-                           else self._hub.dead_error(self.uid, self.attempt)))
+        with _spans.current_recorder().span("p2p_recv"):
+            return self._peer_net.take(
+                (self.uid, self.attempt, seq, part), self._coll_timeout,
+                abort=lambda: ("task cancelled" if self.cancelled.is_set()
+                               else self._hub.dead_error(self.uid,
+                                                         self.attempt)))
 
     def all_to_all_arrays(self, chunks: list) -> list:
         """Personalized all-to-all of numpy column chunks — the shuffle
@@ -510,6 +560,7 @@ class ProcTaskComm:
         # and the receiver's take() derive it from the SAME lockstep counter
         # the control allgather advances, so no extra coordination is needed
         raw_seq, control = self._seq, [None] * self.n_parts
+        rec = _spans.current_recorder()
         for j in range(self.n_parts):
             if j == self.part:
                 continue
@@ -517,10 +568,11 @@ class ProcTaskComm:
             if use_raw:
                 metas, bufs = _encode_cols(chunks[j])
                 wid, host, port = self._peer_addrs[j]
-                sent = self._peer_net.send_raw(
-                    wid, (host, port), bufs, uid=self.uid,
-                    attempt=self.attempt, seq=raw_seq, part=self.part,
-                    cols=metas)
+                with rec.span("p2p_send"):
+                    sent = self._peer_net.send_raw(
+                        wid, (host, port), bufs, uid=self.uid,
+                        attempt=self.attempt, seq=raw_seq, part=self.part,
+                        cols=metas)
                 if sent:
                     self.p2p_bytes += sum(b.nbytes for b in bufs)
             if sent:
@@ -541,11 +593,14 @@ class ProcTaskComm:
                 continue
             ctrl = gathered[i][self.part]
             if isinstance(ctrl, str) and ctrl == raw:
-                d = self._peer_net.take(
-                    (self.uid, self.attempt, raw_seq, i), self._coll_timeout,
-                    abort=lambda: ("task cancelled" if self.cancelled.is_set()
-                                   else self._hub.dead_error(self.uid,
-                                                             self.attempt)))
+                with rec.span("p2p_recv"):
+                    d = self._peer_net.take(
+                        (self.uid, self.attempt, raw_seq, i),
+                        self._coll_timeout,
+                        abort=lambda: ("task cancelled"
+                                       if self.cancelled.is_set()
+                                       else self._hub.dead_error(
+                                           self.uid, self.attempt)))
                 out.append(_decode_cols(d["cols"], d["payload"]))
             else:
                 out.append(ctrl)
@@ -582,6 +637,17 @@ class Worker:
         self._tasks: dict = {}   # (uid, attempt) -> cancel Event, while the
         # part runs here; doubles as the is-this-attempt-alive check
         self._jax_devices = None
+        # worker-lifetime flight-recorder registry: every part's comm
+        # registry chains into it (counters: hub_calls, p2p_bytes,
+        # p2p_fallbacks, spills, spill_bytes) and its snapshot rides every
+        # HEARTBEAT frame as the telemetry the parent surfaces as trace
+        # events — liveness and observability share one frame
+        self.metrics = _metrics.MetricsRegistry()
+        self.metrics.gauge("queue_depth", lambda: len(self._tasks))
+        self.metrics.gauge("rss_mb", _metrics.rss_mb)
+        if self.peer_net is not None:
+            self.metrics.gauge("peer_channels",
+                               lambda: len(self.peer_net._out))
 
     # --- device inventory -------------------------------------------------
     def _local_devices(self, indices, build_comm: bool):
@@ -602,21 +668,28 @@ class Worker:
         uid, attempt, part = d["uid"], d["attempt"], d["part"]
         comm_s = 0.0
         comm = None
+        rec = _spans.SpanRecorder()
+        t_recv = d.pop("_recv_t", None)
+        if t_recv is not None:
+            rec.add("launch_recv", t_recv, time.perf_counter())
 
         def stats() -> dict:
             return {"p2p_bytes": comm.p2p_bytes if comm else 0,
                     "hub_calls": comm.hub_calls if comm else 0,
                     "p2p_fallbacks": comm.p2p_fallbacks if comm else 0,
-                    "spills": comm.spills if comm else 0}
+                    "spills": comm.spills if comm else 0,
+                    "spans": rec.export()}
 
         try:
             devs = self._local_devices(d["local_devices"], d["build_comm"])
             if d["build_comm"]:
                 from repro.core.communicator import build_communicator
                 shape = d["mesh_shape"] if d["n_parts"] == 1 else None
-                local = build_communicator(devs, d["mesh_axes"], shape,
-                                           uid=f"task{uid}.p{part}",
-                                           placement=d.get("placement", ""))
+                with rec.span("comm_build"):
+                    local = build_communicator(
+                        devs, d["mesh_axes"], shape,
+                        uid=f"task{uid}.p{part}",
+                        placement=d.get("placement", ""))
                 comm_s = local.build_seconds
             else:
                 local = StubComm(devices=devs,
@@ -630,9 +703,17 @@ class Worker:
                                 peer_net=self.peer_net,
                                 peer_addrs=d.get("peer_addrs"),
                                 p2p_threshold=d.get("p2p_threshold", 1024),
-                                raw_frames=d.get("raw_frames", True))
-            fn, args, kwargs = serialize.loads(d["payload"])
-            res = fn(comm, *args, **kwargs)
+                                raw_frames=d.get("raw_frames", True),
+                                registry=_metrics.MetricsRegistry(
+                                    parent=self.metrics))
+            # the recorder is bound to THIS thread for the payload call, so
+            # nested library code (comm collectives, shuffle SpillBuffer)
+            # records spans without any parameter plumbing
+            with _spans.bound(rec):
+                with rec.span("deserialize"):
+                    fn, args, kwargs = serialize.loads(d["payload"])
+                with rec.span("compute"):
+                    res = fn(comm, *args, **kwargs)
             self.chan.send(protocol.PART_DONE, uid=uid, attempt=attempt,
                            part=part, result=serialize.dumps(res),
                            error=None, comm_build_s=comm_s, **stats())
@@ -662,8 +743,13 @@ class Worker:
         while True:
             time.sleep(self.heartbeat)
             try:
+                # every beat carries the gauge/counter snapshot plus a fresh
+                # perf_counter stamp so the parent can place the telemetry
+                # event on its own clock via the HELLO offset
                 self.chan.send(protocol.HEARTBEAT, worker=self.worker_id,
-                               t=time.time())
+                               t=time.time(),
+                               perf_t=time.perf_counter(),
+                               telemetry=self.metrics.snapshot())
             except ConnectionClosed as e:
                 self._log(f"exiting: heartbeat send failed ({e})")
                 os._exit(1)          # parent died: no reason to live on
@@ -671,11 +757,14 @@ class Worker:
     # --- main loop --------------------------------------------------------
     def run(self):
         data_addr = self.peer_net.data_addr if self.peer_net else None
+        # perf_t is stamped as late as possible before the send: the parent
+        # computes this worker's clock offset from it at HELLO receipt
         self.chan.send(protocol.HELLO, worker=self.worker_id, pid=os.getpid(),
                        n_devices=self.n_devices, token=self.token,
                        platform=sys.platform,
                        data_host=data_addr[0] if data_addr else None,
-                       data_port=data_addr[1] if data_addr else None)
+                       data_port=data_addr[1] if data_addr else None,
+                       perf_t=time.perf_counter())
         threading.Thread(target=self._heartbeat_loop, daemon=True).start()
         while True:
             try:
@@ -684,6 +773,9 @@ class Worker:
                 self._log(f"exiting: parent channel closed ({e})")
                 os._exit(1)
             if kind == protocol.LAUNCH:
+                # stamp receipt so the part records the launch_recv span
+                # (queueing delay between frame arrival and thread pickup)
+                d["_recv_t"] = time.perf_counter()
                 # register the cancel flag BEFORE the part thread exists so
                 # a CANCEL racing the thread start is never lost (frames on
                 # one channel are ordered: LAUNCH always precedes CANCEL)

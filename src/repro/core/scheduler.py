@@ -59,6 +59,7 @@ from repro.core.executors import (
     ThreadExecutor, VirtualClockExecutor, default_overhead_model,
 )
 from repro.core.pilot import InsufficientResources, ResourceManager
+from repro.obs import trace as _obs_trace
 from repro.core.placement import PACK, PLACEMENTS, SPREAD, Topology
 from repro.core.task import Task, TaskDescription, TaskState
 
@@ -102,7 +103,8 @@ def interleave_by_pipeline(tasks):
 class TraceEvent:
     t: float          # executor clock (virtual seconds or perf_counter)
     kind: str         # submit|dispatch|comm_build|done|fail|retry|speculate|
-                      # cancel|device_failure|steal|return|grow|retire
+                      # cancel|device_failure|steal|return|grow|retire|
+                      # telemetry
     task: str = ""    # task name ("" for pool-level events)
     uid: int = -1
     pipeline: str = ""
@@ -117,6 +119,13 @@ class TraceEvent:
                          # sim/thread backends report 0 — same schema.
     spills: float = 0.0  # shuffle partitions the task spilled to disk
                          # (out-of-core shuffle evidence, same schema rule)
+    data: dict = dataclasses.field(default_factory=dict)
+                         # kind-specific structured payload: terminal events
+                         # carry {hub_calls, p2p_fallbacks, hub_relay_bytes}
+                         # (the comm-stats evidence trace_summary reports);
+                         # telemetry events carry the worker id + its gauge
+                         # snapshot.  Empty dict everywhere else — the
+                         # schema never forks per backend.
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -131,6 +140,12 @@ class SimReport:
     n_speculative: int = 0
     n_retries: int = 0
     trace: list = dataclasses.field(default_factory=list)
+    spans: list = dataclasses.field(default_factory=list)   # worker-side
+    # flight-recorder spans aligned into the executor clock; empty on
+    # backends without instrumented workers (sim/thread) — same schema
+    telemetry: list = dataclasses.field(default_factory=list)   # heartbeat
+    # gauge snapshots ({t, worker, queue_depth, rss_mb, ...}); empty on
+    # sim/thread backends
 
     def pipeline_makespan(self, key: str) -> float:
         return self.per_pipeline.get(key, 0.0)
@@ -160,7 +175,8 @@ class SchedulerSession:
                  pipelines: Optional[Sequence[str]] = None,
                  speculative_factor: Optional[float] = None,
                  tick: float = 0.05, placement: str = SPREAD,
-                 work_stealing: bool = False):
+                 work_stealing: bool = False,
+                 trace_path: Optional[str] = None):
         if placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {placement!r}; expected "
                              f"one of {PLACEMENTS}")
@@ -176,6 +192,21 @@ class SchedulerSession:
         self.pending: list[Task] = []
         self.running: dict[int, Task] = {}
         self.trace: list[TraceEvent] = []
+        self.spans: list[dict] = []      # worker flight-recorder spans,
+        # parent-clock aligned (empty on sim/thread — same schema)
+        self.telemetry: list[dict] = []  # heartbeat gauge snapshots
+        # durable capture: every TraceEvent/span/telemetry record streams to
+        # JSONL as it happens (crash-safe line-buffered writes) when
+        # trace_path or the REPRO_TRACE env knob names a destination
+        self._writer = None
+        path = _obs_trace.resolve_trace_path(trace_path)
+        if path:
+            self._writer = _obs_trace.TraceWriter(path)
+            self._writer.meta(
+                n_devices=resource_manager.total, policy=policy,
+                placement=placement, t0=self.t0,
+                backend=type(executor).__name__,
+                wall_clock=bool(executor.wall_clock))
         self.overhead_total = 0.0
         self.n_speculative = 0
         self.n_retries = 0
@@ -193,14 +224,26 @@ class SchedulerSession:
 
     # -- trace ------------------------------------------------------------
     def _tr(self, kind: str, task: Optional[Task] = None, t: Optional[float] = None,
-            value: float = 0.0, p2p: float = 0.0, spills: float = 0.0):
-        self.trace.append(TraceEvent(
+            value: float = 0.0, p2p: float = 0.0, spills: float = 0.0,
+            data: Optional[dict] = None):
+        ev = TraceEvent(
             t=self.executor.now() if t is None else t, kind=kind,
             task=task.desc.name if task else "",
             uid=task.uid if task else -1,
             pipeline=task.desc.tags.get("pipeline", "default") if task else "",
             ranks=task.desc.ranks if task else 0, value=value, p2p=p2p,
-            spills=spills))
+            spills=spills, data=data or {})
+        self.trace.append(ev)
+        if self._writer is not None:
+            self._writer.event(ev)
+
+    def _record_spans(self, spans):
+        if not spans:
+            return
+        self.spans.extend(spans)
+        if self._writer is not None:
+            for s in spans:
+                self._writer.span(s)
 
     # -- pools ------------------------------------------------------------
     def _ensure_pools(self, descs: Sequence[TaskDescription]):
@@ -386,11 +429,16 @@ class SchedulerSession:
             key = t.desc.tags.get("pipeline", "default")
             per_pipeline[key] = max(per_pipeline.get(key, 0.0),
                                     t.end_time - t0)
+        if self._writer is not None:
+            self._writer.close()
+            self._writer = None
         return SimReport(makespan=makespan, tasks=list(self.tasks),
                          overhead_total=self.overhead_total,
                          per_pipeline=per_pipeline,
                          n_speculative=self.n_speculative,
-                         n_retries=self.n_retries, trace=list(self.trace))
+                         n_retries=self.n_retries, trace=list(self.trace),
+                         spans=list(self.spans),
+                         telemetry=list(self.telemetry))
 
     def run(self, descs: Sequence[TaskDescription],
             timeout: Optional[float] = None) -> SimReport:
@@ -585,6 +633,19 @@ class SchedulerSession:
 
     def _handle(self, ev: ExecEvent) -> list[Task]:
         now = self.executor.now()
+        if ev.kind == "telemetry":
+            # a worker heartbeat's gauge snapshot: surfaced as a periodic
+            # trace event so a stuck or swapping worker (climbing RSS, flat
+            # queue) is visible in the recorded trace BEFORE it misses
+            # liveness and becomes a device_failure
+            rec = dict(ev.telemetry or {})
+            rec.setdefault("t", now)
+            rec["worker"] = ev.worker
+            self.telemetry.append(rec)
+            self._tr("telemetry", t=rec["t"], data=rec)
+            if self._writer is not None:
+                self._writer.telemetry(rec)
+            return []
         if ev.kind == "grow":
             # elastic grow: the executor (ProcessExecutor.add_worker /
             # inject_grow) names the exact joining handles; the virtual
@@ -643,6 +704,14 @@ class SchedulerSession:
         task.p2p_bytes = ev.p2p_bytes
         task.hub_calls = ev.hub_calls
         task.spills = ev.spills
+        task.p2p_fallbacks = ev.p2p_fallbacks
+        task.hub_relay_bytes = ev.hub_relay_bytes
+        # worker flight-recorder spans arrive piggybacked on the terminal
+        # event, already aligned into this executor's clock
+        self._record_spans(ev.spans)
+        stats = {"hub_calls": ev.hub_calls,
+                 "p2p_fallbacks": ev.p2p_fallbacks,
+                 "hub_relay_bytes": ev.hub_relay_bytes}
         if task.uid in self._ignored:
             self._ignored.discard(task.uid)
             self._dispatch()   # live twin finished after cancel: reclaim only
@@ -662,7 +731,7 @@ class SchedulerSession:
             task.state = TaskState.FAILED
             task.error = ev.error
             self._tr("fail", task, p2p=float(ev.p2p_bytes),
-                     spills=float(ev.spills))
+                     spills=float(ev.spills), data=stats)
             self._dispatch()
             return []
 
@@ -680,7 +749,7 @@ class SchedulerSession:
             task.error = ev.error
             task.end_time = now
             self._tr("fail", task, p2p=float(ev.p2p_bytes),
-                     spills=float(ev.spills))
+                     spills=float(ev.spills), data=stats)
             # terminal: a still-running speculative duplicate must not flip
             # this task back to DONE later
             self._finished_uids.add(task.uid)
@@ -701,10 +770,12 @@ class SchedulerSession:
         target.p2p_bytes = ev.p2p_bytes
         target.hub_calls = ev.hub_calls
         target.spills = ev.spills
+        target.p2p_fallbacks = ev.p2p_fallbacks
+        target.hub_relay_bytes = ev.hub_relay_bytes
         self._done_durations.setdefault(target.desc.name, []).append(
             now - target.start_time)
         self._tr("done", target, p2p=float(ev.p2p_bytes),
-                 spills=float(ev.spills))
+                 spills=float(ev.spills), data=stats)
         self._maybe_speculate()
         self._dispatch()
         return [target]

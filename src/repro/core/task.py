@@ -64,6 +64,11 @@ class Task:
     hub_calls: int = 0               # parent-hub round-trips the task paid
     spills: int = 0                  # shuffle partitions spilled to disk
     # under the out-of-core path (0 on sim/thread backends)
+    p2p_fallbacks: int = 0           # above-threshold payloads that relayed
+    # through the hub because a peer channel could not be used
+    hub_relay_bytes: int = 0         # real payload bytes the hub relayed for
+    # this task's collectives (peer-plane collectives contribute only the
+    # tiny PEER_SENT marker; 0 on sim/thread backends)
 
     @property
     def run_seconds(self) -> float:

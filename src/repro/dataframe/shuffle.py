@@ -34,8 +34,11 @@ import os
 import shutil
 import tempfile
 import time
+from time import perf_counter
 
 import numpy as np
+
+from repro.obs.spans import current_recorder
 
 _HASH_MULT = np.uint32(2654435761)
 
@@ -137,6 +140,8 @@ class SpillBuffer:
         self.key = key
         self.runs: list[dict] = []
         self.spills = 0
+        self.spill_bytes = 0     # bytes written to disk across spilled runs
+        # (the telemetry counter a worker's heartbeat reports)
         self._mem = 0
         self._dir = spill_dir
         self._own_dir = spill_dir is None
@@ -156,15 +161,19 @@ class SpillBuffer:
                 for name, v in run.items()}
         nbytes = sum(v.nbytes for v in srun.values())
         if self._mem + nbytes > self.budget:
-            d = self._spill_path()
-            i = self.spills
-            mapped = {}
-            for name, v in srun.items():
-                path = os.path.join(d, f"run{i}_{name}.npy")
-                np.save(path, v)
-                mapped[name] = np.load(path, mmap_mode="r")
+            # the thread-bound flight recorder (a no-op outside instrumented
+            # worker parts) times the disk write — no parameter plumbing
+            with current_recorder().span("spill_write"):
+                d = self._spill_path()
+                i = self.spills
+                mapped = {}
+                for name, v in srun.items():
+                    path = os.path.join(d, f"run{i}_{name}.npy")
+                    np.save(path, v)
+                    mapped[name] = np.load(path, mmap_mode="r")
             self.runs.append(mapped)
             self.spills += 1
+            self.spill_bytes += nbytes
         else:
             self.runs.append(srun)
             self._mem += nbytes
@@ -190,7 +199,9 @@ class SpillBuffer:
             cursors[i] = hi
             return {k: np.asarray(v[lo:hi]) for k, v in runs[i].items()}
 
+        rec = current_recorder()
         while True:
+            t0 = perf_counter()
             for i in range(len(runs)):
                 if (bufs[i] is None or len(bufs[i][self.key]) == 0) \
                         and cursors[i] < totals[i]:
@@ -214,7 +225,11 @@ class SpillBuffer:
             out = {k: np.concatenate([p[k] for p in pieces])
                    for k in pieces[0]}
             order = np.argsort(out[self.key], kind="stable")
-            yield {k: v[order] for k, v in out.items()}
+            chunk = {k: v[order] for k, v in out.items()}
+            # explicit add (not the with-form): a context manager spanning
+            # the yield would charge the CONSUMER's work to the merge span
+            rec.add("merge", t0, perf_counter())
+            yield chunk
 
     def close(self):
         self.runs = []
@@ -415,6 +430,8 @@ def sort_task(comm, spec: dict) -> dict:
                 collected.append(chunk)
         if hasattr(comm, "spills"):
             comm.spills += buf.spills
+        if hasattr(comm, "metrics"):
+            comm.metrics.inc("spill_bytes", buf.spill_bytes)
         summary = {"part": part, "n": total, "key_sum": ksum, "min": first,
                    "max": last, "sorted": ordered, "spills": buf.spills}
         if spec.get("collect"):
@@ -480,6 +497,9 @@ def join_task(comm, spec: dict) -> dict:
                 collected.append(chunk)
         if hasattr(comm, "spills"):
             comm.spills += lbuf.spills + rbuf.spills
+        if hasattr(comm, "metrics"):
+            comm.metrics.inc("spill_bytes",
+                             lbuf.spill_bytes + rbuf.spill_bytes)
         summary = {"part": part, "n": total, "key_sum": ksum,
                    "v_sum": vsum, "w_sum": wsum,
                    "spills": lbuf.spills + rbuf.spills}

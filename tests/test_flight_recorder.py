@@ -1,0 +1,446 @@
+"""Flight recorder: worker spans, telemetry heartbeats, durable JSONL
+capture, Perfetto export, and replay loading.
+
+Pure-unit coverage (recorders, metrics registry, path resolution, JSONL
+round-trip on the virtual clock, torn-tail tolerance, exporter shape) stays
+in tier-1; the 2-worker process-executor round-trips are ``integration``.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    ProcessExecutor, ResourceManager, SchedulerSession, SimOptions,
+    TaskDescription, TaskState, VirtualClockExecutor,
+)
+from repro.core.executors import serialize
+from repro.obs import (
+    MetricsRegistry, NullRecorder, SpanRecorder, align, bound,
+    current_recorder, export_perfetto, load_trace, resolve_trace_path,
+    rss_mb,
+)
+from repro.obs.spans import SPAN_KINDS, WAIT_KINDS
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+
+if serialize.HAVE_CLOUDPICKLE:
+    import cloudpickle
+
+    cloudpickle.register_pickle_by_value(sys.modules[__name__])
+
+needs_cloudpickle = pytest.mark.skipif(
+    not serialize.HAVE_CLOUDPICKLE,
+    reason="cloudpickle needed to ship test-local payload functions")
+
+
+def _trace_summary(report):
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.common import trace_summary
+    return trace_summary(report)
+
+
+# ---------------------------------------------------------------------------
+# span recorder units
+# ---------------------------------------------------------------------------
+def test_span_recorder_records_and_exports():
+    rec = SpanRecorder()
+    with rec.span("compute"):
+        pass
+    rec.add("merge", 1.0, 2.5)
+    out = rec.export()
+    assert [k for k, _, _ in out] == ["compute", "merge"]
+    assert all(t1 >= t0 for _, t0, t1 in out)
+    assert set(k for k, _, _ in out) <= set(SPAN_KINDS)
+
+
+def test_null_recorder_is_inert_default():
+    # outside an instrumented part the thread-local recorder is a no-op —
+    # shuffle helpers can record unconditionally
+    rec = current_recorder()
+    assert isinstance(rec, NullRecorder)
+    with rec.span("spill_write"):
+        rec.add("merge", 0.0, 1.0)
+    assert rec.export() == []
+
+
+def test_bound_recorder_is_thread_local():
+    rec = SpanRecorder()
+    seen = {}
+
+    def other_thread():
+        seen["other"] = current_recorder()
+
+    with bound(rec):
+        assert current_recorder() is rec
+        t = threading.Thread(target=other_thread)
+        t.start()
+        t.join()
+    assert isinstance(seen["other"], NullRecorder)   # binding didn't leak
+    assert isinstance(current_recorder(), NullRecorder)
+
+
+def test_align_tags_and_shifts():
+    spans = [("compute", 1.0, 2.0), ("p2p_recv", 1.2, 1.4)]
+    out = align(spans, 10.0, worker="w0", part=1, uid=7, task="t")
+    assert out[0] == {"kind": "compute", "t0": 11.0, "t1": 12.0,
+                      "worker": "w0", "part": 1, "uid": 7, "task": "t"}
+    assert out[1]["kind"] == "p2p_recv" and out[1]["t0"] == 11.2
+
+
+@given(st.lists(st.tuples(st.sampled_from(SPAN_KINDS),
+                          st.floats(0, 1e6),
+                          st.floats(0, 60)),
+                max_size=20),
+       st.floats(-1e9, 1e9))
+@settings(max_examples=200, deadline=None)
+def test_align_clock_offset_preserves_order_and_nesting(raw, offset):
+    """Clock-offset alignment is a pure shift: every <=-relation between
+    endpoints (ordering, monotonicity, span nesting) must survive, whatever
+    the worker's offset — the property the merged multi-worker timeline
+    rests on (IEEE rounding of x+c is monotone in x)."""
+    spans = [(k, t0, t0 + dur) for k, t0, dur in raw]
+    out = align(spans, offset, worker="w")
+    assert len(out) == len(spans)
+    ends = [e for _, t0, t1 in spans for e in (t0, t1)]
+    ends2 = [e for s in out for e in (s["t0"], s["t1"])]
+    for i in range(len(ends)):
+        for j in range(len(ends)):
+            if ends[i] <= ends[j]:
+                assert ends2[i] <= ends2[j]
+    for s in out:
+        assert s["t0"] <= s["t1"]      # spans never invert
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_metrics_registry_parent_chaining():
+    worker = MetricsRegistry()
+    part = MetricsRegistry(parent=worker)
+    part.inc("hub_calls")
+    part.inc("hub_calls", 2)
+    part2 = MetricsRegistry(parent=worker)
+    part2.inc("hub_calls", 5)
+    assert part.get("hub_calls") == 3
+    assert worker.get("hub_calls") == 8       # lifetime totals accumulate
+
+
+def test_metrics_set_counter_keeps_delta_semantics():
+    """``comm.spills += n`` compiles to a read + set_counter: the parent
+    must see only the DELTA, not the re-applied absolute value."""
+    worker = MetricsRegistry()
+    part = MetricsRegistry(parent=worker)
+    part.set_counter("spills", 4)
+    part.set_counter("spills", 4)             # idempotent re-set: no delta
+    part.set_counter("spills", 6)
+    assert part.get("spills") == 6
+    assert worker.get("spills") == 6
+
+
+def test_metrics_gauges_snapshot_and_rss():
+    reg = MetricsRegistry()
+    reg.inc("p2p_bytes", 100)
+    reg.gauge("depth", lambda: 3)
+    reg.gauge("broken", lambda: 1 / 0)
+    snap = reg.snapshot()
+    assert snap["p2p_bytes"] == 100 and snap["depth"] == 3
+    assert snap["broken"] == -1               # raising gauge never kills HB
+    assert rss_mb() > 1.0
+
+
+# ---------------------------------------------------------------------------
+# trace path resolution
+# ---------------------------------------------------------------------------
+def test_resolve_trace_path_modes(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    assert resolve_trace_path() is None
+    f = tmp_path / "sub" / "run.jsonl"
+    assert resolve_trace_path(str(f)) == str(f)
+    assert f.parent.is_dir()                  # parent dirs are created
+    monkeypatch.setenv("REPRO_TRACE", str(tmp_path / "env.jsonl"))
+    assert resolve_trace_path() == str(tmp_path / "env.jsonl")
+    assert resolve_trace_path(str(f)) == str(f)   # explicit beats env
+    # directory mode: one unique file per session, never a clobber
+    d = tmp_path / "traces"
+    p1 = resolve_trace_path(str(d) + os.sep)
+    Path(p1).touch()
+    p2 = resolve_trace_path(str(d))
+    assert p1 != p2
+    assert Path(p1).parent == d and p1.endswith(".jsonl")
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip on the virtual clock (same schema as proc, no spans)
+# ---------------------------------------------------------------------------
+def _sim_session(trace_path=None, n_devices=4):
+    return SchedulerSession(
+        VirtualClockExecutor(SimOptions(noise=0.0,
+                                        overhead_model=lambda r: 0.0)),
+        ResourceManager(list(range(n_devices))), trace_path=trace_path)
+
+
+def _sim_descs(n=6):
+    return [TaskDescription(name=f"t{i}", ranks=1 + i % 2, fn=None,
+                            duration_model=lambda r: 0.2,
+                            tags={"pipeline": "p"})
+            for i in range(n)]
+
+
+def test_sim_jsonl_roundtrip_and_replay(tmp_path):
+    path = tmp_path / "sim.jsonl"
+    rep = _sim_session(str(path)).run(_sim_descs())
+    rec = load_trace(str(path))
+    assert rec.meta["backend"] == "VirtualClockExecutor"
+    assert rec.meta["n_devices"] == 4
+    assert rec.spans == [] and rec.telemetry == []   # same schema, empty
+    live, loaded = _trace_summary(rep), _trace_summary(rec)
+    assert loaded == live
+    assert loaded["n_done"] == 6
+    assert "compute_s" not in loaded          # span keys only when spans
+    # replay: the recorded arrival/duration skeleton re-runs noise-free on
+    # the virtual clock with an identical schedule shape
+    replayed = _trace_summary(rec.replay())
+    for k in ("n_submit", "n_dispatch", "n_done"):
+        assert replayed[k] == live[k]
+
+
+def test_repro_trace_env_directory_capture(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE", str(tmp_path))
+    _sim_session().run(_sim_descs(2))
+    _sim_session().run(_sim_descs(2))
+    files = sorted(tmp_path.glob("trace-*.jsonl"))
+    assert len(files) == 2                    # one unique file per session
+    assert _trace_summary(load_trace(str(files[0])))["n_done"] == 2
+
+
+def test_torn_final_line_is_skipped(tmp_path):
+    path = tmp_path / "torn.jsonl"
+    rep = _sim_session(str(path)).run(_sim_descs(3))
+    whole = _trace_summary(load_trace(str(path)))
+    with open(path, "a", encoding="utf-8") as f:
+        f.write('{"type": "event", "kind": "disp')   # SIGKILL mid-write
+    assert _trace_summary(load_trace(str(path))) == whole == _trace_summary(rep)
+
+
+def test_sigkill_mid_run_leaves_parseable_prefix(tmp_path):
+    """A run killed -9 mid-flight (no close(), no flush call) must leave a
+    JSONL prefix that load_trace fully parses — the crash-forensics
+    contract of the line-buffered writer."""
+    path = tmp_path / "killed.jsonl"
+    child = (
+        "import os, signal, sys\n"
+        "from repro.core import (ResourceManager, SchedulerSession,\n"
+        "    SimOptions, TaskDescription, VirtualClockExecutor)\n"
+        "sess = SchedulerSession(VirtualClockExecutor(SimOptions(noise=0.0)),\n"
+        f"    ResourceManager(list(range(2))), trace_path={str(path)!r})\n"
+        "sess.submit([TaskDescription(name=f't{i}', ranks=1, fn=None,\n"
+        "    duration_model=lambda r: 0.1, tags={'pipeline': 'p'})\n"
+        "    for i in range(8)])\n"
+        "sess.wait_any()\n"
+        "os.kill(os.getpid(), signal.SIGKILL)\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", child], env=env, timeout=120)
+    assert r.returncode == -signal.SIGKILL
+    rec = load_trace(str(path))
+    assert rec.meta.get("backend") == "VirtualClockExecutor"
+    s = _trace_summary(rec)
+    assert s["n_submit"] == 8 and s["n_dispatch"] >= 1
+    # truncated runs still replay: unfinished tasks get zero durations
+    assert _trace_summary(rec.replay())["n_submit"] == 8
+
+
+# ---------------------------------------------------------------------------
+# perfetto export
+# ---------------------------------------------------------------------------
+def _fake_spans():
+    return (align([("launch_recv", 0.00, 0.01), ("deserialize", 0.01, 0.02),
+                   ("compute", 0.02, 0.30), ("p2p_recv", 0.05, 0.12)],
+                  0.0, worker="w0", part=0, uid=0, task="t0")
+            + align([("compute", 0.02, 0.25), ("spill_write", 0.10, 0.15)],
+                    0.0, worker="w1", part=1, uid=0, task="t0"))
+
+
+def test_perfetto_export_shape(tmp_path):
+    rep = _sim_session(str(tmp_path / "p.jsonl")).run(_sim_descs(4))
+    rec = load_trace(str(tmp_path / "p.jsonl"))
+    rec.spans.extend(_fake_spans())
+    rec.telemetry.append({"worker": "w0", "t": 0.1, "queue_depth": 2,
+                          "rss_mb": 17.5, "label": "not-a-number"})
+    out = tmp_path / "p.trace.json"
+    doc = export_perfetto(rec, str(out))
+    assert json.loads(out.read_text()) == doc
+    ev = doc["traceEvents"]
+    procs = {e["args"]["name"] for e in ev if e["ph"] == "M"}
+    assert {"scheduler", "worker w0", "worker w1"} <= procs
+    tasks = [e for e in ev if e["ph"] == "X" and e["cat"] == "task"]
+    assert len(tasks) == 4 and all(e["dur"] > 0 for e in tasks)
+    spans = [e for e in ev if e["ph"] == "X" and e["cat"] == "span"]
+    assert {e["name"] for e in spans} == {"launch_recv", "deserialize",
+                                          "compute", "p2p_recv",
+                                          "spill_write"}
+    counters = {e["name"] for e in ev if e["ph"] == "C"}
+    assert counters == {"queue_depth", "rss_mb"}   # strings are skipped
+    assert all(e["ts"] >= 0 for e in ev if "ts" in e)
+
+
+def test_perfetto_cli_default_output(tmp_path, capsys):
+    from repro.obs.perfetto import main
+    path = tmp_path / "run.jsonl"
+    _sim_session(str(path)).run(_sim_descs(2))
+    main([str(path)])
+    out = tmp_path / "run.trace.json"
+    assert out.exists()
+    assert "traceEvents" in json.loads(out.read_text())
+    assert str(out) in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# trace_summary / trace_gantt span paths
+# ---------------------------------------------------------------------------
+class _FakeReport:
+    def __init__(self, spans):
+        self.trace = []
+        self.tasks = []
+        self.spans = spans
+        self.telemetry = []
+
+
+def test_trace_summary_span_derived_breakdown():
+    s = _trace_summary(_FakeReport(_fake_spans()))
+    assert s["compute_s"] == pytest.approx(0.28 + 0.23)
+    assert s["comm_wait_s"] == pytest.approx(0.07)
+    assert s["p2p_fallbacks"] == 0 and s["hub_relay_bytes"] == 0
+
+
+def test_trace_gantt_span_lanes_and_heuristic_fallback():
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.report import trace_gantt
+    txt = trace_gantt(_FakeReport(_fake_spans()), width=40)
+    assert "span-traced" in txt and "2 workers" in txt
+    assert "w0.0" in txt and "w1.0" in txt
+    assert "~" in txt                         # p2p_recv wait shading
+    assert "overall compute utilization" in txt
+    # span-less reports keep the heuristic event-stream path
+    rep = _sim_session().run(_sim_descs(3))
+    assert rep.spans == []
+    assert "devices)" in trace_gantt(rep) and "span-traced" not in \
+        trace_gantt(rep)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat knob resolution (no worker spawn)
+# ---------------------------------------------------------------------------
+def test_heartbeat_knob_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_HEARTBEAT", raising=False)
+    ex = ProcessExecutor(n_workers=0, build_comm=False)
+    assert ex.hb_interval == 0.5 and ex.hb_timeout == 2.5
+    monkeypatch.setenv("REPRO_HEARTBEAT", "0.1")
+    ex = ProcessExecutor(n_workers=0, build_comm=False)
+    assert ex.hb_interval == 0.1
+    assert ex.hb_timeout == 2.0               # liveness floor holds
+    ex = ProcessExecutor(n_workers=0, build_comm=False, heartbeat=2.0)
+    assert ex.hb_interval == 2.0              # kwarg beats env
+    assert ex.hb_timeout == 10.0              # timeout tracks the interval
+    ex = ProcessExecutor(n_workers=0, build_comm=False, heartbeat=2.0,
+                         heartbeat_timeout=3.0)
+    assert ex.hb_timeout == 3.0               # explicit decoupling
+
+
+# ---------------------------------------------------------------------------
+# payloads shipped to workers (module-level, pickled by value)
+# ---------------------------------------------------------------------------
+def _gather_probe(comm, n_coll=2):
+    for _ in range(n_coll):
+        comm.allgather(comm.global_ranks)
+    return comm.size
+
+
+def _slow_probe(comm, dur=0.6):
+    time.sleep(dur)
+    return comm.allgather(comm.rank)
+
+
+# ---------------------------------------------------------------------------
+# process-executor round trips (subprocess-spawning)
+# ---------------------------------------------------------------------------
+@needs_cloudpickle
+@pytest.mark.integration
+def test_proc_jsonl_roundtrip_counters_spans_and_replay(tmp_path):
+    """2-worker live run with capture on: the JSONL trace must reproduce
+    the live report's trace_summary EXACTLY (counters and span-derived
+    seconds), carry clock-aligned worker spans, and replay through the
+    virtual clock with an identical schedule shape."""
+    path = tmp_path / "proc.jsonl"
+    with ProcessExecutor(n_workers=2, devices_per_worker=2, build_comm=False,
+                         heartbeat=0.2, tick=0.02) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02,
+                                trace_path=str(path))
+        rep = sess.run(
+            [TaskDescription(name="span", ranks=4, fn=_gather_probe,
+                             tags={"pipeline": "p"}),
+             TaskDescription(name="solo", ranks=1, fn=_gather_probe,
+                             tags={"pipeline": "p"})],
+            timeout=120)
+    assert all(t.state == TaskState.DONE for t in rep.tasks)
+    live = _trace_summary(rep)
+    # the 4-rank task splits into 2 parts; each part's 2 allgathers are hub
+    # round-trips, summed across parts by the tracker
+    assert live["hub_calls"] == 4
+    assert live["compute_s"] > 0
+
+    rec = load_trace(str(path))
+    assert rec.meta["backend"] == "ProcessExecutor"
+    assert _trace_summary(rec) == live
+    kinds = {s["kind"] for s in rec.spans}
+    assert {"launch_recv", "deserialize", "compute"} <= kinds <= \
+        set(SPAN_KINDS)
+    assert {s["worker"] for s in rec.spans} == {"w0", "w1"}
+    # hub collectives surface as wait spans on the spanning task's parts
+    assert any(s["kind"] in WAIT_KINDS and s["task"] == "span"
+               for s in rec.spans)
+    for s in rec.spans:                       # aligned to the parent clock
+        assert s["t1"] >= s["t0"] >= 0
+    replayed = _trace_summary(rec.replay())
+    for k in ("n_submit", "n_dispatch", "n_done"):
+        assert replayed[k] == live[k] == 2
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_heartbeat_telemetry_flows_into_trace(tmp_path):
+    """A task outliving the heartbeat interval: gauge snapshots must arrive
+    as ``telemetry`` trace events, land in the JSONL, and feed Perfetto
+    counter tracks."""
+    path = tmp_path / "hb.jsonl"
+    with ProcessExecutor(n_workers=2, devices_per_worker=1, build_comm=False,
+                         heartbeat=0.1, tick=0.02) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02,
+                                trace_path=str(path))
+        rep = sess.run([TaskDescription(name="slow", ranks=2, fn=_slow_probe,
+                                        tags={"pipeline": "p"})], timeout=120)
+    assert rep.tasks[0].state == TaskState.DONE
+    assert rep.telemetry                      # at least one beat landed
+    sample = rep.telemetry[0]
+    assert {"worker", "t", "queue_depth", "rss_mb"} <= set(sample)
+    assert sample["rss_mb"] > 1.0
+    assert {r["worker"] for r in rep.telemetry} <= {"w0", "w1"}
+    tel_events = rep.events("telemetry")
+    assert tel_events and tel_events[0].data.get("queue_depth") is not None
+
+    rec = load_trace(str(path))
+    assert len(rec.telemetry) == len(rep.telemetry)
+    counters = {e["name"] for e in export_perfetto(rec)["traceEvents"]
+                if e["ph"] == "C"}
+    assert "queue_depth" in counters and "rss_mb" in counters
