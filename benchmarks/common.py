@@ -76,6 +76,13 @@ def trace_summary(report) -> dict:
                              for t in report.tasks),
         "hub_relay_bytes": sum(getattr(t, "hub_relay_bytes", 0)
                                for t in report.tasks),
+        # transport-tier evidence: zero-copy framed bytes, same-host
+        # shared-memory bytes, and ring-allgather forwards (PR 8)
+        "raw_coll_bytes": sum(getattr(t, "raw_coll_bytes", 0)
+                              for t in report.tasks),
+        "shm_bytes": sum(getattr(t, "shm_bytes", 0) for t in report.tasks),
+        "ring_steps": sum(getattr(t, "ring_steps", 0)
+                          for t in report.tasks),
     }
     # span-derived timing breakdown, present only when worker flight-recorder
     # spans exist (process executor with instrumented workers, or a loaded

@@ -31,6 +31,9 @@ class Communicator:
     p2p_bytes: int = 0            # bytes moved worker-to-worker
     hub_calls: int = 0            # parent-hub round-trips paid
     spills: int = 0               # shuffle partitions spilled to disk
+    raw_coll_bytes: int = 0       # bytes shipped with zero-copy framing
+    shm_bytes: int = 0            # bytes moved through shm segments
+    ring_steps: int = 0           # ring-allgather forwards performed
 
     @property
     def size(self) -> int:

@@ -38,6 +38,11 @@ class ExecEvent:
     # to the hub relay (peer channel unusable)
     hub_relay_bytes: int = 0       # real payload bytes the hub relayed for
     # the task's collectives (control-only PEER_SENT frames excluded)
+    raw_coll_bytes: int = 0        # collective bytes shipped with zero-copy
+    # raw framing (generic raw frames + raw-layout shm segments)
+    shm_bytes: int = 0             # payload bytes handed to same-host peers
+    # through shared-memory segments (a subset of p2p_bytes)
+    ring_steps: int = 0            # ring-allgather block forwards performed
     spans: list = dataclasses.field(default_factory=list)   # worker-side
     # flight-recorder spans of a terminal event, already aligned into the
     # parent clock: [{kind, t0, t1, worker, part, uid, task}, ...]; empty

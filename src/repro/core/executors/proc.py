@@ -59,6 +59,7 @@ from pathlib import Path
 from typing import NamedTuple, Optional, Sequence, Union
 
 from repro.core.executors import protocol, serialize
+from repro.core.executors import shm as _shmseg
 from repro.core.executors.base import ExecEvent, QueueEventExecutor
 from repro.core.executors.protocol import Channel, ConnectionClosed
 from repro.core.pilot import ResourceManager
@@ -142,6 +143,10 @@ class _Tracker:
         self.p2p_fallbacks = 0                    # hub-relay fallbacks paid
         self.hub_relay_bytes = 0                  # payload bytes the hub
         # relayed for this task (accumulated hub-side in _coll_contribution)
+        self.raw_coll_bytes = 0                   # collective bytes shipped
+        self.shm_bytes = 0                        # with zero-copy framing /
+        self.ring_steps = 0                       # through shm segments /
+        # ring forwards performed — the transport-tier evidence per task
         self.spans: list = []                     # worker flight-recorder
         # spans, aligned into the parent clock — piggybacked per PART_DONE
 
@@ -175,7 +180,9 @@ class ProcessExecutor(QueueEventExecutor):
                  extra_pythonpath: Sequence[str] = (),
                  p2p: Optional[bool] = None,
                  p2p_threshold: int = 1024,
-                 raw_frames: Optional[bool] = None):
+                 raw_frames: Optional[bool] = None,
+                 ring: Optional[bool] = None,
+                 shm: Optional[bool] = None):
         super().__init__()
         if isinstance(devices_per_worker, int):
             devices_per_worker = [devices_per_worker] * n_workers
@@ -207,6 +214,15 @@ class ProcessExecutor(QueueEventExecutor):
         # shuffle benchmark flips to measure pickled vs raw transport)
         self.raw_frames = (os.environ.get("REPRO_RAW_FRAMES", "1") != "0") \
             if raw_frames is None else raw_frames
+        # ring allgather for wide (>= 4 part) tasks: None -> on unless
+        # REPRO_RING=0 (tier A/B knob; direct all-to-all otherwise)
+        self.ring = (os.environ.get("REPRO_RING", "1") != "0") \
+            if ring is None else ring
+        # same-host shared-memory payload handoff: None -> on unless
+        # REPRO_SHM=0 (the CI matrix flips it so the tcp tiers stay
+        # exercised end to end on single-host runners too)
+        self.shm = (os.environ.get("REPRO_SHM", "1") != "0") \
+            if shm is None else shm
         self.spills = 0         # shuffle partitions spilled to disk, summed
         # from the workers' PART_DONE accounting
         self.hub_calls = 0      # COLL round-trips served by this hub
@@ -216,6 +232,11 @@ class ProcessExecutor(QueueEventExecutor):
         # the workers' PART_DONE accounting (the hub never sees these bytes)
         self.p2p_fallbacks = 0  # above-threshold payloads that fell back to
         # the hub relay, summed from the workers' PART_DONE accounting
+        self.raw_coll_bytes = 0   # collective bytes shipped with zero-copy
+        # raw framing (PEER_DATA_GEN frames + raw-layout shm segments)
+        self.shm_bytes = 0      # payload bytes handed to same-host peers
+        # through shared-memory segments (a subset of p2p_bytes)
+        self.ring_steps = 0     # ring-allgather block forwards performed
         self._counts = list(devices_per_worker)
         self.workers: dict[str, _WorkerHandle] = {}
         self._running: dict[int, _Tracker] = {}
@@ -389,6 +410,21 @@ class ProcessExecutor(QueueEventExecutor):
         if self._logdir is not None:
             shutil.rmtree(self._logdir, ignore_errors=True)
             self._logdir = None
+        self._sweep_segments()
+
+    def _sweep_segments(self, wid: Optional[str] = None):
+        """Remove ``/dev/shm`` residue of the shm transport tier.  Segments
+        are named ``repro_{token8}_{creator_wid}_...``, so a dead or retired
+        worker's leftovers (segments whose header never reached a receiver
+        — the one cleanup the worker cannot do for itself after SIGKILL)
+        are swept by its prefix; with no ``wid`` the whole pilot's prefix
+        goes (shutdown safety net)."""
+        if not self._token:
+            return
+        prefix = f"repro_{self._token[:8]}_"
+        if wid is not None:
+            prefix += f"{wid}_"
+        _shmseg.sweep(prefix)
 
     def kill_worker(self, wid: str, sig: int = signal.SIGKILL):
         """Test/chaos hook: hard-kill one worker (true process isolation)."""
@@ -491,6 +527,7 @@ class ProcessExecutor(QueueEventExecutor):
         if wh.chan is not None:
             wh.chan.close()
         self._broadcast_peers(removed=(wid,))
+        self._sweep_segments(wid)
 
     def _busy_parts(self, wid: str) -> bool:
         """True while any in-flight tracker still owes a part hosted on
@@ -637,7 +674,8 @@ class ProcessExecutor(QueueEventExecutor):
                     placement=task.placement,
                     peer_addrs=peer_addrs,
                     p2p_threshold=self.p2p_threshold,
-                    raw_frames=self.raw_frames)
+                    raw_frames=self.raw_frames,
+                    ring=self.ring, shm=self.shm)
             except ConnectionClosed:
                 # this part (and the never-launched rest) can't run; parts
                 # already launched on other workers complete the tracker
@@ -729,7 +767,8 @@ class ProcessExecutor(QueueEventExecutor):
                        error: Optional[str] = None, result=None,
                        comm_s: float = 0.0, p2p_bytes: int = 0,
                        hub_calls: int = 0, spills: int = 0,
-                       p2p_fallbacks: int = 0, spans=()):
+                       p2p_fallbacks: int = 0, raw_coll_bytes: int = 0,
+                       shm_bytes: int = 0, ring_steps: int = 0, spans=()):
         """Record one part's fate; the task's single terminal ExecEvent is
         delivered only when EVERY part is accounted for (result, error, or
         hosted on a dead worker)."""
@@ -743,10 +782,16 @@ class ProcessExecutor(QueueEventExecutor):
             tracker.hub_calls += hub_calls
             tracker.spills += spills
             tracker.p2p_fallbacks += p2p_fallbacks
+            tracker.raw_coll_bytes += raw_coll_bytes
+            tracker.shm_bytes += shm_bytes
+            tracker.ring_steps += ring_steps
             tracker.spans.extend(spans)
             self.p2p_bytes += p2p_bytes
             self.spills += spills
             self.p2p_fallbacks += p2p_fallbacks
+            self.raw_coll_bytes += raw_coll_bytes
+            self.shm_bytes += shm_bytes
+            self.ring_steps += ring_steps
             first_error = error is not None and tracker.error is None
             if first_error:
                 tracker.error = error
@@ -769,6 +814,9 @@ class ProcessExecutor(QueueEventExecutor):
                                   spills=tracker.spills,
                                   p2p_fallbacks=tracker.p2p_fallbacks,
                                   hub_relay_bytes=tracker.hub_relay_bytes,
+                                  raw_coll_bytes=tracker.raw_coll_bytes,
+                                  shm_bytes=tracker.shm_bytes,
+                                  ring_steps=tracker.ring_steps,
                                   spans=list(tracker.spans)))
         else:
             # results stay as bytes until poll(): deserializing a large
@@ -782,6 +830,9 @@ class ProcessExecutor(QueueEventExecutor):
                                   spills=tracker.spills,
                                   p2p_fallbacks=tracker.p2p_fallbacks,
                                   hub_relay_bytes=tracker.hub_relay_bytes,
+                                  raw_coll_bytes=tracker.raw_coll_bytes,
+                                  shm_bytes=tracker.shm_bytes,
+                                  ring_steps=tracker.ring_steps,
                                   spans=list(tracker.spans)))
 
     def _fail_all_parts(self, tracker: _Tracker, error: str):
@@ -801,6 +852,9 @@ class ProcessExecutor(QueueEventExecutor):
                             hub_calls=d.get("hub_calls", 0),
                             spills=d.get("spills", 0),
                             p2p_fallbacks=d.get("p2p_fallbacks", 0),
+                            raw_coll_bytes=d.get("raw_coll_bytes", 0),
+                            shm_bytes=d.get("shm_bytes", 0),
+                            ring_steps=d.get("ring_steps", 0),
                             spans=_spans.align(
                                 d.get("spans") or (), wh.clock_offset,
                                 worker=wh.wid, part=d["part"], uid=d["uid"],
@@ -874,3 +928,6 @@ class ProcessExecutor(QueueEventExecutor):
         # survivors evict their cached peer channels to the dead worker now,
         # not on their next (doomed) send to it
         self._broadcast_peers(removed=(wid,))
+        # reclaim /dev/shm segments the dead worker created but nobody will
+        # consume (its receivers abort; the header may never have shipped)
+        self._sweep_segments(wid)

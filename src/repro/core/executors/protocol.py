@@ -66,6 +66,24 @@ worker -> worker (peer data plane, same framing on the data port):
               arrays' memoryviews straight to the socket and the receiver
               reconstructs zero-copy views with ``np.frombuffer`` — which
               is what makes MB-scale shuffle buckets cheap to ship.
+  PEER_DATA_GEN {uid, attempt, seq, part, nbytes,
+              skel: bytes, arrs: [(dtype, shape), ...]} generic raw-buffer
+              framing for ANY collective payload (allgather/bcast bodies,
+              not just shuffle column dicts): ``skel`` is the pickled
+              container skeleton with array leaves replaced by indexed
+              placeholders (``serialize.dumps_arrays``), ``arrs`` the
+              leaves' dtype/shape metadata, and ``nbytes`` of raw leaf
+              bytes follow the header on the stream exactly like
+              PEER_DATA_RAW.
+  PEER_DATA_SHM {uid, attempt, seq, part, nbytes, shm,
+              skel: bytes|None, arrs: list|None}        same-host handoff:
+              the body bytes live in the named tmpfs segment file ``shm``
+              (see ``executors.shm``) — only this header travels on the
+              socket.  ``skel``/``arrs`` carry the generic raw layout
+              (``skel is None`` means the segment holds one pickled
+              payload).  The RECEIVER unlinks the segment after copying
+              it out; unconsumed segments are unlinked by the sender's
+              purge or swept by the parent (worker death).
 """
 from __future__ import annotations
 
@@ -87,10 +105,14 @@ SHUTDOWN = "shutdown"
 PEER_HELLO = "peer_hello"
 PEER_DATA = "peer_data"
 PEER_DATA_RAW = "peer_data_raw"
+PEER_DATA_GEN = "peer_data_gen"
+PEER_DATA_SHM = "peer_data_shm"
 
 #: frame kinds whose pickled header is followed by ``nbytes`` of raw body
-#: bytes on the same stream (read by ``Channel.recv`` into ``payload``)
-RAW_BODY_KINDS = frozenset({PEER_DATA_RAW})
+#: bytes on the same stream (read by ``Channel.recv`` into ``payload``).
+#: PEER_DATA_SHM is deliberately NOT here: its body never touches the
+#: socket — it lives in the named shared-memory segment.
+RAW_BODY_KINDS = frozenset({PEER_DATA_RAW, PEER_DATA_GEN})
 
 #: Placeholder a part sends the hub instead of its payload when the payload
 #: already went worker-to-worker over the peer data plane.  Real payloads are

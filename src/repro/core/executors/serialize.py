@@ -58,3 +58,123 @@ def dumps(obj) -> bytes:
 def loads(data: bytes):
     # cloudpickle output is plain pickle on the wire; stdlib loads both
     return pickle.loads(data)
+
+
+# --- array-leaf splitting (zero-copy collective framing) --------------------
+#
+# A collective payload is usually a container whose big leaves are numpy/JAX
+# arrays and whose everything-else is small.  ``dumps_arrays`` splits such a
+# payload into a tiny pickled *skeleton* (the container structure with each
+# array leaf replaced by an :class:`_ArrayRef`) plus the arrays' contiguous
+# buffers, which the transport ships as raw bytes — no pickle pass over the
+# MB-scale body.  ``loads_arrays`` reverses it with zero-copy
+# ``np.frombuffer`` views.  Payloads with no array leaves return ``None``
+# from ``dumps_arrays`` so callers take the plain pickled path.
+
+
+class _ArrayRef:
+    """Skeleton placeholder for an extracted array leaf; ``i`` indexes the
+    side-channel buffer list.  Stdlib-picklable on purpose: skeletons must
+    decode even without cloudpickle."""
+
+    __slots__ = ("i",)
+
+    def __init__(self, i: int):
+        self.i = i
+
+    def __reduce__(self):
+        return (_ArrayRef, (self.i,))
+
+
+def _as_array(leaf):
+    """``leaf`` as a C-contiguous ndarray when it is raw-shippable (numpy or
+    JAX array of a non-object dtype), else None.  Detection is type-based —
+    lists/scalars/bytes must never be promoted to arrays, or the round trip
+    would change the payload's types."""
+    import numpy as np
+    if isinstance(leaf, np.ndarray):
+        a = leaf
+    elif (type(leaf).__module__.split(".", 1)[0] in ("jax", "jaxlib")
+          and hasattr(leaf, "__array__")):
+        a = np.asarray(leaf)
+    else:
+        return None
+    if a.dtype.hasobject:
+        return None                  # object arrays still need pickle
+    return np.ascontiguousarray(a)
+
+
+def _split(obj, bufs: list):
+    a = _as_array(obj)
+    if a is not None:
+        bufs.append(a)
+        return _ArrayRef(len(bufs) - 1)
+    t = type(obj)
+    # walk only the exact builtin containers: subclasses (namedtuples,
+    # OrderedDicts with semantics, user types) stay opaque pickled leaves
+    if t is dict:
+        return {k: _split(v, bufs) for k, v in obj.items()}
+    if t is list:
+        return [_split(v, bufs) for v in obj]
+    if t is tuple:
+        return tuple(_split(v, bufs) for v in obj)
+    return obj
+
+
+def _join(obj, arrs: list):
+    if isinstance(obj, _ArrayRef):
+        return arrs[obj.i]
+    t = type(obj)
+    if t is dict:
+        return {k: _join(v, arrs) for k, v in obj.items()}
+    if t is list:
+        return [_join(v, arrs) for v in obj]
+    if t is tuple:
+        return tuple(_join(v, arrs) for v in obj)
+    return obj
+
+
+def dumps_arrays(obj):
+    """Split ``obj`` into ``(skeleton_bytes, metas, bufs)`` where ``metas``
+    is ``[(dtype_str, shape), ...]`` and ``bufs`` the matching contiguous
+    arrays whose raw bytes follow the header on the wire.  Returns ``None``
+    when the payload holds no array leaves — plain pickle is then both
+    simpler and cheaper."""
+    bufs: list = []
+    skel = _split(obj, bufs)
+    if not bufs:
+        return None
+    metas = [(a.dtype.str, a.shape) for a in bufs]
+    return dumps(skel), metas, bufs
+
+
+def loads_arrays(skel_bytes: bytes, metas, payload):
+    """Inverse of :func:`dumps_arrays` given the received body ``payload``
+    (the buffers concatenated in ``metas`` order).  Array leaves come back
+    as read-only ``np.frombuffer`` views aliasing ``payload`` — callers
+    that mutate must copy first (same contract as the shuffle frames)."""
+    import numpy as np
+    arrs, off = [], 0
+    for dtype, shape in metas:
+        dt = np.dtype(dtype)
+        count = 1
+        for s in shape:
+            count *= int(s)
+        arrs.append(np.frombuffer(payload, dt, count=count,
+                                  offset=off).reshape(shape))
+        off += dt.itemsize * count
+    return _join(loads(skel_bytes), arrs)
+
+
+def copy_local(obj):
+    """Deep copy with the exact semantics of ``loads(dumps(obj))`` — the
+    result never aliases the input — but without pickling array bytes:
+    array leaves short-circuit through ``np.array`` (a writable copy) and
+    only the small skeleton round-trips through pickle.  This is the
+    single-part collective path, the hottest pack-placement overhead."""
+    import numpy as np
+    bufs: list = []
+    skel = _split(obj, bufs)
+    if not bufs:
+        return loads(dumps(obj))
+    return _join(loads(dumps(skel)), [np.array(a) for a in bufs])

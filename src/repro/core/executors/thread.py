@@ -21,6 +21,9 @@ class StubComm:
     p2p_bytes: int = 0           # uniform comm-stats surface: an in-process
     hub_calls: int = 0           # comm never pays a hub or peer transfer
     spills: int = 0              # nor spills shuffle partitions to disk
+    raw_coll_bytes: int = 0      # nor ships raw/shm frames or forwards
+    shm_bytes: int = 0           # ring blocks — constant zeros keep the
+    ring_steps: int = 0          # transport counters uniform across backends
 
     @property
     def size(self) -> int:

@@ -27,6 +27,7 @@ import time
 from typing import Optional
 
 from repro.core.executors import protocol, serialize
+from repro.core.executors import shm as _shmseg
 from repro.core.executors.protocol import Channel, ConnectionClosed
 from repro.core.executors.thread import StubComm
 from repro.obs import metrics as _metrics
@@ -131,6 +132,11 @@ class _PeerNet:
         self._out: dict = {}                      # dest worker id -> Channel
         self._out_lock = threading.Lock()
         self._server: Optional[socket.socket] = None
+        # shared-memory ledger: segments THIS worker created per attempt,
+        # reclaimed by purge(failed=True) when the attempt aborts before
+        # receivers could consume them (the receiver unlinks on consume)
+        self._shm_sent: dict = {}                 # (uid, attempt) -> [name]
+        self._shm_lock = threading.Lock()
 
     # --- inbound ----------------------------------------------------------
     def start(self, advertise_host: str):
@@ -169,21 +175,41 @@ class _PeerNet:
                 if kind == protocol.PEER_DATA:
                     self.put((d["uid"], d["attempt"], d["seq"], d["part"]),
                              d["payload"])
-                elif kind == protocol.PEER_DATA_RAW:
-                    # raw-buffer frame: park the whole header dict — it
-                    # carries the column metadata next to the raw bytes the
-                    # Channel already read off the stream
+                elif kind in (protocol.PEER_DATA_RAW, protocol.PEER_DATA_GEN,
+                              protocol.PEER_DATA_SHM):
+                    # raw / generic / shm frame: park the whole header dict
+                    # — it carries the layout metadata next to the raw body
+                    # the Channel already read off the stream (or the name
+                    # of the shared-memory segment holding it)
+                    if kind == protocol.PEER_DATA_SHM:
+                        # eager consume: copy the segment body out HERE so
+                        # the tmpfs read overlaps the collective's hub
+                        # barrier (matching the pipelining a streamed TCP
+                        # body gets for free) and the segment's lifetime
+                        # ends the moment the header lands.  A vanished
+                        # segment (sender aborted and purged) keeps its
+                        # "shm" key: the claimer surfaces the error.
+                        try:
+                            d["payload"] = _shmseg.read(d["shm"])
+                            _shmseg.unlink(d.pop("shm"))
+                        except OSError:
+                            pass
                     self.put((d["uid"], d["attempt"], d["seq"], d["part"]), d)
         except (ConnectionClosed, OSError):
             chan.close()
 
     # --- mailbox ----------------------------------------------------------
-    def put(self, key: tuple, payload: bytes):
+    def put(self, key: tuple, payload):
+        dropped = None
         with self._cv:
             if key[:2] in self._done:
-                return                # attempt already ended: unclaimable
-            self._mail[key] = payload
-            self._cv.notify_all()
+                dropped = payload     # attempt already ended: unclaimable
+            else:
+                dropped = self._mail.get(key)    # displaced duplicate (a
+                # ring rescue and a recovered link can both deliver a block)
+                self._mail[key] = payload
+                self._cv.notify_all()
+        _discard_frame(dropped)
 
     def take(self, key: tuple, timeout: float, abort=None) -> bytes:
         """Blocking receive of one peer payload.  ``abort()`` (if given)
@@ -205,18 +231,38 @@ class _PeerNet:
                         f"peer payload {key} not received within {timeout}s")
                 self._cv.wait(min(left, 0.05))
 
-    def purge(self, uid: int, attempt: int):
+    def purge(self, uid: int, attempt: int, failed: bool = False):
         """Drop parked payloads of a finished/aborted attempt — they can
         never be claimed (keys carry the attempt id) and would otherwise
         accumulate for the worker's life.  The attempt is tombstoned so a
-        frame still in flight on a peer channel is dropped on arrival."""
+        frame still in flight on a peer channel is dropped on arrival.
+
+        Parked shared-memory frames are unlinked here (nobody will consume
+        them), and ``failed=True`` additionally reclaims every segment THIS
+        worker created for the attempt: an aborted attempt's receivers
+        raise out of their takes without consuming.  A clean finish leaves
+        sent segments to the receivers, who unlink on consume."""
         with self._cv:
+            dropped = []
             for k in [k for k in self._mail
                       if k[0] == uid and k[1] == attempt]:
-                del self._mail[k]
+                dropped.append(self._mail.pop(k))
             self._done[(uid, attempt)] = None
             while len(self._done) > self.MAX_TOMBSTONES:
                 del self._done[next(iter(self._done))]
+        for f in dropped:
+            _discard_frame(f)
+        with self._shm_lock:
+            names = self._shm_sent.pop((uid, attempt), ())
+        if failed:
+            for name in names:
+                _shmseg.unlink(name)
+
+    def record_segment(self, uid: int, attempt: int, name: str):
+        """Ledger a shared-memory segment created for (uid, attempt) so an
+        aborted attempt's purge can reclaim it (see :meth:`purge`)."""
+        with self._shm_lock:
+            self._shm_sent.setdefault((uid, attempt), []).append(name)
 
     # --- outbound ---------------------------------------------------------
     def _channel(self, wid: str, addr: tuple,
@@ -257,17 +303,23 @@ class _PeerNet:
         if chan is not None:
             chan.close()
 
-    def send(self, wid: str, addr: tuple, **fields) -> bool:
-        """Ship one PEER_DATA frame to worker ``wid``; True on success.  A
-        stale cached channel (peer restarted its end, half-closed socket) is
-        dropped and retried ONCE on a fresh connection — never reused for
-        the caller's retry attempt."""
+    def send_kind(self, wid: str, addr: tuple, kind: str, bufs=None,
+                  **fields) -> bool:
+        """Ship one peer frame of ``kind`` to worker ``wid``; True on
+        success.  ``bufs`` (for RAW_BODY_KINDS) are written to the stream
+        as the raw body after the header.  A stale cached channel (peer
+        restarted its end, half-closed socket) is dropped and retried ONCE
+        on a fresh connection — never reused for the caller's retry
+        attempt."""
         for fresh in (False, True):
             chan = self._channel(wid, addr, fresh=fresh)
             if chan is None:
                 continue
             try:
-                chan.send(protocol.PEER_DATA, **fields)
+                if bufs is not None:
+                    chan.send_raw(kind, bufs, **fields)
+                else:
+                    chan.send(kind, **fields)
                 return True
             except ConnectionClosed:
                 with self._out_lock:
@@ -276,23 +328,23 @@ class _PeerNet:
                 chan.close()
         return False
 
+    def send(self, wid: str, addr: tuple, **fields) -> bool:
+        """Ship one pickled-body PEER_DATA frame (see :meth:`send_kind`)."""
+        return self.send_kind(wid, addr, protocol.PEER_DATA, **fields)
+
     def send_raw(self, wid: str, addr: tuple, bufs, **fields) -> bool:
-        """Ship one PEER_DATA_RAW frame (header + raw buffer bytes, no
-        pickle of the body) to worker ``wid``; True on success.  Same
-        cached-channel + one-fresh-retry policy as :meth:`send`."""
-        for fresh in (False, True):
-            chan = self._channel(wid, addr, fresh=fresh)
-            if chan is None:
-                continue
-            try:
-                chan.send_raw(protocol.PEER_DATA_RAW, bufs, **fields)
-                return True
-            except ConnectionClosed:
-                with self._out_lock:
-                    if self._out.get(wid) is chan:
-                        del self._out[wid]
-                chan.close()
-        return False
+        """Ship one PEER_DATA_RAW frame — header + raw buffer bytes, no
+        pickle of the body (see :meth:`send_kind`)."""
+        return self.send_kind(wid, addr, protocol.PEER_DATA_RAW, bufs=bufs,
+                              **fields)
+
+
+def _discard_frame(frame):
+    """Reclaim resources owned by a peer frame that will never be consumed
+    (tombstoned attempt, displaced duplicate): a shared-memory frame's
+    segment must be unlinked NOW — the consume path will never see it."""
+    if isinstance(frame, dict) and frame.get("shm"):
+        _shmseg.unlink(frame["shm"])
 
 
 def _encode_cols(chunk: dict):
@@ -327,6 +379,38 @@ def _decode_cols(metas, payload: bytes) -> dict:
     return out
 
 
+class _WirePayload:
+    """One collective payload in wire-ready form: either pickled (``data``
+    set) or raw-split (``skel``/``metas``/``bufs`` set — the
+    ``serialize.dumps_arrays`` shape, where ``bufs`` holds the array leaves
+    on the sending side or the single received body-bytes object on a ring
+    forward)."""
+
+    __slots__ = ("data", "skel", "metas", "bufs")
+
+    def __init__(self, data=None, skel=None, metas=None, bufs=None):
+        self.data = data
+        self.skel = skel
+        self.metas = metas
+        self.bufs = bufs
+
+    @property
+    def nbytes(self) -> int:
+        """Raw body size: what a peer frame's stream body (or shm segment)
+        carries."""
+        if self.data is not None:
+            return len(self.data)
+        return sum(memoryview(b).nbytes for b in self.bufs)
+
+    @property
+    def size(self) -> int:
+        """Total wire size, for threshold decisions (raw adds the pickled
+        skeleton that rides in the frame header)."""
+        if self.data is not None:
+            return len(self.data)
+        return len(self.skel) + self.nbytes
+
+
 class ProcTaskComm:
     """The communicator a payload receives under :class:`ProcessExecutor`.
 
@@ -345,11 +429,33 @@ class ProcTaskComm:
     hub round-trip still happens per collective, but carries only the tiny
     ``PEER_SENT`` placeholder — it is the ordering/barrier control frame,
     not a data relay.  Payloads at or under the threshold (barrier tokens,
-    bcast Nones, small scalars) stay inline on the hub frame.  If any peer
-    send fails, THIS part's payload falls back to the hub frame for that
-    collective (``p2p_fallbacks``) and every receiver still completes —
-    receivers decide per hub value whether to read it inline or await the
-    peer copy, so mixed outcomes cannot deadlock."""
+    small scalars) stay inline on the hub frame.  If any peer send fails,
+    THIS part's payload falls back to the hub frame for that collective
+    (``p2p_fallbacks``) and every receiver still completes — receivers
+    decide per hub value whether to read it inline or await the peer copy,
+    so mixed outcomes cannot deadlock.
+
+    Transport tiers (chosen per payload, per destination, best first):
+
+    1. **same-host shared memory** — the address book says the peer is on
+       this host: the body goes into a ``multiprocessing.shared_memory``
+       segment, only name + layout header on the socket (``shm_bytes``).
+    2. **raw peer frame** — array leaves ship as raw bytes after a pickled
+       skeleton header, no pickle pass over the body (``raw_coll_bytes``;
+       PEER_DATA_GEN, the generic sibling of the shuffle's PEER_DATA_RAW).
+    3. **pickled peer frame** — cloudpickle body on the peer channel
+       (payloads with no array leaves, or ``raw_frames=False``).
+    4. **hub relay** — the per-payload fallback when no peer tier works.
+
+    Wide tasks (``n_parts >= RING_MIN_PARTS``) additionally replace the
+    every-part-sends-to-every-peer allgather with a P-1 step ring
+    (``ring_steps``), cutting per-link traffic from O(P·B) to O(B); parts
+    2-3 keep the direct path (fewer hops, same bytes).  Remote entries of
+    a raw-framed gather are read-only ``np.frombuffer`` views — copy
+    before mutating in place (the shuffle-frame contract)."""
+
+    #: ring allgather needs at least this many parts to beat direct sends
+    RING_MIN_PARTS = 4
 
     def __init__(self, uid: int, world_size: int, global_ranks: tuple,
                  part: int, n_parts: int, local_comm, hub: _Hub,
@@ -358,6 +464,7 @@ class ProcTaskComm:
                  placement: str = "", peer_net: Optional[_PeerNet] = None,
                  peer_addrs: Optional[list] = None,
                  p2p_threshold: int = 1024, raw_frames: bool = True,
+                 ring: bool = True, shm: bool = True,
                  registry=None):
         self.uid = uid
         self.attempt = attempt
@@ -378,8 +485,10 @@ class ProcTaskComm:
         # telemetry always agree without double bookkeeping
         self.metrics = registry if registry is not None \
             else _metrics.MetricsRegistry()
-        self.raw_frames = raw_frames  # PEER_DATA_RAW enabled (knob for A/B
-        # benchmarking against the pickled PEER_DATA path)
+        self.raw_frames = raw_frames  # raw-body peer frames enabled (knob
+        # for A/B benchmarking against the pickled PEER_DATA path)
+        self.ring = ring              # ring allgather for wide tasks
+        self.shm = shm and _shmseg.HAVE_SHM   # same-host segment handoff
         self._hub = hub
         self._seq = 0
         self._coll_timeout = coll_timeout
@@ -392,6 +501,9 @@ class ProcTaskComm:
         self._peers_ok = (peer_net is not None
                           and len(self._peer_addrs) == n_parts
                           and all(a is not None for a in self._peer_addrs))
+        # this part's advertised host: the same-host test for the shm tier
+        # compares address-book entries, never re-resolves interfaces
+        self._host = self._peer_addrs[part][1] if self._peers_ok else None
 
     # --- registry-backed comm counters (attribute surface preserved) -----
     @property
@@ -435,6 +547,37 @@ class ProcTaskComm:
     def spills(self, v: int):
         self.metrics.set_counter("spills", v)
 
+    @property
+    def raw_coll_bytes(self) -> int:
+        """Collective payload bytes this part sent with zero-copy raw
+        framing (generic PEER_DATA_GEN frames plus raw-layout shm segments)
+        — the bytes that never passed through pickle."""
+        return self.metrics.get("raw_coll_bytes")
+
+    @raw_coll_bytes.setter
+    def raw_coll_bytes(self, v: int):
+        self.metrics.set_counter("raw_coll_bytes", v)
+
+    @property
+    def shm_bytes(self) -> int:
+        """Payload bytes this part handed to same-host peers through
+        shared-memory segments (counted by the sender, like p2p_bytes)."""
+        return self.metrics.get("shm_bytes")
+
+    @shm_bytes.setter
+    def shm_bytes(self, v: int):
+        self.metrics.set_counter("shm_bytes", v)
+
+    @property
+    def ring_steps(self) -> int:
+        """Ring-allgather forwards this part performed (each moves ONE
+        part's block one hop; a wide gather costs P-1 per part)."""
+        return self.metrics.get("ring_steps")
+
+    @ring_steps.setter
+    def ring_steps(self, v: int):
+        self.metrics.set_counter("ring_steps", v)
+
     # --- Communicator-compatible surface (local ranks) -------------------
     @property
     def mesh(self):
@@ -465,6 +608,130 @@ class ProcTaskComm:
     def sub(self, axis: str):
         return self.local_comm.sub(axis)
 
+    # --- transport tiers: encode / ship / receive / decode ----------------
+    def _encode(self, obj) -> _WirePayload:
+        """Wire form of one collective payload: raw-split when raw framing
+        is on and the payload has array leaves, else pickled."""
+        if self.raw_frames:
+            split = serialize.dumps_arrays(obj)
+            if split is not None:
+                skel, metas, bufs = split
+                return _WirePayload(skel=skel, metas=metas, bufs=bufs)
+        return _WirePayload(data=serialize.dumps(obj))
+
+    def _hub_form(self, pl: _WirePayload, obj) -> bytes:
+        """The payload as inline hub bytes (small payloads and per-payload
+        fallback) — always plain pickle, whatever tier was attempted."""
+        return pl.data if pl.data is not None else serialize.dumps(obj)
+
+    def _ship(self, dest: int, pl: _WirePayload, seq: int,
+              origin: Optional[int] = None) -> bool:
+        """Ship one wire payload to part ``dest`` down the tier ladder:
+        same-host shared memory -> raw peer frame -> pickled peer frame.
+        ``origin`` keys the frame when forwarding another part's ring
+        block.  False when no peer tier could deliver — the caller falls
+        back to the hub (own payload) or to direct sends around the dead
+        link (forwarded block)."""
+        wid, host, port = self._peer_addrs[dest]
+        head = dict(uid=self.uid, attempt=self.attempt, seq=seq,
+                    part=self.part if origin is None else origin)
+        raw = pl.data is None
+        nbytes = pl.nbytes
+        if (self.shm and self._host is not None and host == self._host
+                and nbytes > self.p2p_threshold):
+            name = _shmseg.segment_name(self._peer_net.token,
+                                        self._peer_net.worker_id)
+            ok = True
+            try:
+                _shmseg.write(name, pl.bufs if raw else [pl.data])
+            except OSError:
+                ok = False           # /dev/shm full/unusable: next tier
+                _shmseg.unlink(name)
+            if ok:
+                if self._peer_net.send_kind(
+                        wid, (host, port), protocol.PEER_DATA_SHM,
+                        shm=name, nbytes=nbytes, skel=pl.skel,
+                        arrs=pl.metas, **head):
+                    self._peer_net.record_segment(self.uid, self.attempt,
+                                                  name)
+                    self.p2p_bytes += nbytes
+                    self.shm_bytes += nbytes
+                    if raw:
+                        self.raw_coll_bytes += nbytes
+                    return True
+                _shmseg.unlink(name)   # header never left: reclaim now
+        if raw:
+            if self._peer_net.send_kind(wid, (host, port),
+                                        protocol.PEER_DATA_GEN,
+                                        bufs=pl.bufs, skel=pl.skel,
+                                        arrs=pl.metas, **head):
+                self.p2p_bytes += nbytes
+                self.raw_coll_bytes += nbytes
+                return True
+            return False
+        if self._peer_net.send_kind(wid, (host, port), protocol.PEER_DATA,
+                                    payload=pl.data, **head):
+            self.p2p_bytes += nbytes
+            return True
+        return False
+
+    def _abort_reason(self) -> Optional[str]:
+        return ("task cancelled" if self.cancelled.is_set()
+                else self._hub.dead_error(self.uid, self.attempt))
+
+    def _take_frame(self, seq: int, origin: int):
+        with _spans.current_recorder().span("p2p_recv"):
+            return self._peer_net.take(
+                (self.uid, self.attempt, seq, origin), self._coll_timeout,
+                abort=self._abort_reason)
+
+    def _frame_payload(self, frame) -> _WirePayload:
+        """One received peer frame back in wire-ready form, whichever tier
+        carried it — ring forwarding needs the body bytes in hand, and a
+        shm segment must be consumed (copied out + unlinked) exactly
+        once."""
+        if not isinstance(frame, dict):      # PEER_DATA: pickled bytes
+            return _WirePayload(data=frame)
+        if frame.get("shm"):
+            body = self._consume_segment(frame)
+        else:
+            body = frame["payload"]
+        if frame.get("skel") is not None:
+            return _WirePayload(skel=frame["skel"], metas=frame["arrs"],
+                                bufs=[body])
+        return _WirePayload(data=body)
+
+    def _consume_segment(self, frame) -> bytes:
+        """Copy a shm frame's body out of its segment and unlink it —
+        whoever received the header owns the cleanup."""
+        try:
+            return _shmseg.read(frame["shm"])
+        except (FileNotFoundError, OSError) as e:
+            # the sender aborted and reclaimed it; this attempt is dying
+            raise CollectiveError(
+                f"shm segment {frame['shm']} vanished before consume "
+                f"({e})") from e
+        finally:
+            _shmseg.unlink(frame["shm"])
+
+    def _decode(self, pl: _WirePayload):
+        """A received wire payload back as the object (raw array leaves are
+        zero-copy read-only views into the received body)."""
+        if pl.data is not None:
+            return serialize.loads(pl.data)
+        body = (pl.bufs[0] if len(pl.bufs) == 1
+                else b"".join(memoryview(b).cast("B") for b in pl.bufs))
+        return serialize.loads_arrays(pl.skel, pl.metas, body)
+
+    def _decode_own(self, pl: _WirePayload):
+        """This part's own entry of a gathered result, with the same
+        no-aliasing guarantee as remote entries: raw leaves are rebuilt as
+        views into a fresh copy of the body, never the caller's arrays."""
+        if pl.data is not None:
+            return serialize.loads(pl.data)
+        body = b"".join(memoryview(b).cast("B") for b in pl.bufs)
+        return serialize.loads_arrays(pl.skel, pl.metas, body)
+
     # --- cross-process collectives (per-part granularity) -----------------
     def allgather(self, obj) -> list:
         """Gather one object per *part* (worker share), same list everywhere,
@@ -473,67 +740,120 @@ class ProcTaskComm:
 
         A single-part task (all ranks on this worker — what the pack policy
         arranges whenever the task fits one node) completes the collective
-        locally: no hub round-trip, no parent traffic.  The serialize
-        round-trip is kept so the result has identical copy semantics to the
-        spanning case (mutating it never aliases the caller's object).
+        locally: no hub round-trip, no parent traffic; array leaves are
+        copied directly instead of round-tripping through pickle, with the
+        same never-aliases-the-input guarantee.
 
-        A spanning task ships large payloads worker-to-worker (see the class
-        docstring); the hub round-trip remains as the per-collective control
-        barrier and the automatic fallback carrier."""
+        A spanning task ships large payloads worker-to-worker down the tier
+        ladder (see the class docstring), direct to every peer for 2-3
+        parts and around the ring for wide tasks; the hub round-trip
+        remains as the per-collective control barrier and the automatic
+        fallback carrier."""
         if self.n_parts == 1:
             if self.cancelled.is_set():
                 raise CollectiveError("task cancelled")
             self._seq += 1
-            return [serialize.loads(serialize.dumps(obj))]
+            return [serialize.copy_local(obj)]
+        pl = self._encode(obj)
+        if (self.ring and self._peers_ok
+                and self.n_parts >= self.RING_MIN_PARTS):
+            return self._allgather_ring(obj, pl)
+        return self._allgather_direct(obj, pl)
+
+    def _allgather_direct(self, obj, pl: _WirePayload) -> list:
         seq, self._seq = self._seq, self._seq + 1
         rec = _spans.current_recorder()
-        data = serialize.dumps(obj)
-        hub_payload = data
-        if self._peers_ok and len(data) > self.p2p_threshold:
+        hub_payload = None
+        if self._peers_ok and pl.size > self.p2p_threshold:
             with rec.span("p2p_send"):
-                sent = 0
-                for p, addr in enumerate(self._peer_addrs):
-                    if p == self.part:
-                        continue
-                    wid, host, port = addr
-                    if not self._peer_net.send(wid, (host, port),
-                                               uid=self.uid,
-                                               attempt=self.attempt, seq=seq,
-                                               part=self.part, payload=data):
+                sent = True
+                for p in range(self.n_parts):
+                    if p != self.part and not self._ship(p, pl, seq):
+                        sent = False
                         break
-                    sent += 1
-            # bytes already shipped to reachable peers are real peer-plane
-            # traffic even when the remaining sends force a hub fallback
-            self.p2p_bytes += sent * len(data)
-            if sent == self.n_parts - 1:
+            if sent:
                 hub_payload = protocol.PEER_SENT
             else:
                 # a peer copy may already be parked at some receivers; they
                 # will prefer the hub value and purge the duplicate at task
                 # end — correctness never depends on which copy is used
                 self.p2p_fallbacks += 1
+        if hub_payload is None:
+            hub_payload = self._hub_form(pl, obj)
         self.hub_calls += 1
         with rec.span("p2p_recv"):
             values = self._hub.call(self.uid, self.attempt, seq, self.part,
                                     hub_payload, self._coll_timeout)
-        return [serialize.loads(self._resolve(j, v, seq, data))
-                for j, v in enumerate(values)]
+        out = []
+        for j, v in enumerate(values):
+            if v != protocol.PEER_SENT:
+                out.append(serialize.loads(v))
+            elif j == self.part:
+                out.append(self._decode_own(pl))
+            else:
+                out.append(self._decode(self._frame_payload(
+                    self._take_frame(seq, j))))
+        return out
 
-    def _resolve(self, part: int, hub_value: bytes, seq: int,
-                 own_data: bytes) -> bytes:
-        """Map one hub value to the actual payload bytes: inline data stays
-        as-is; the PEER_SENT placeholder means the bytes travelled (or are
-        in flight) on the peer plane."""
-        if hub_value != protocol.PEER_SENT:
-            return hub_value
-        if part == self.part:
-            return own_data
-        with _spans.current_recorder().span("p2p_recv"):
-            return self._peer_net.take(
-                (self.uid, self.attempt, seq, part), self._coll_timeout,
-                abort=lambda: ("task cancelled" if self.cancelled.is_set()
-                               else self._hub.dead_error(self.uid,
-                                                         self.attempt)))
+    def _allgather_ring(self, obj, pl: _WirePayload) -> list:
+        """Wide allgather as a P-1 step ring: every part forwards exactly
+        one block per step to its next neighbor, so each link carries O(B)
+        per step instead of each part pushing O(P·B) direct copies.  The
+        hub round runs FIRST as the control barrier: small payloads ride
+        it inline, large ones announce PEER_SENT — so the set of ring
+        blocks is agreed by every part before any block moves.  A failed
+        forward degrades THAT BLOCK to direct sends for the parts
+        downstream (one bad link never tears down the collective); a
+        genuinely dead peer aborts the attempt through the parent's
+        COLL_ERROR exactly as on the direct path."""
+        seq, self._seq = self._seq, self._seq + 1
+        rec = _spans.current_recorder()
+        n, i = self.n_parts, self.part
+        if pl.size > self.p2p_threshold:
+            hub_payload = protocol.PEER_SENT
+        else:
+            hub_payload = self._hub_form(pl, obj)
+        self.hub_calls += 1
+        with rec.span("p2p_recv"):
+            values = self._hub.call(self.uid, self.attempt, seq, self.part,
+                                    hub_payload, self._coll_timeout)
+        ring = {j for j, v in enumerate(values) if v == protocol.PEER_SENT}
+        blocks = {i: pl}
+        nxt = (i + 1) % n
+        for step in range(n - 1):
+            o_send = (i - step) % n
+            o_recv = (i - 1 - step) % n
+            if o_send in ring:
+                with rec.span("p2p_send"):
+                    if self._ship(nxt, blocks[o_send], seq, origin=o_send):
+                        self.ring_steps += 1
+                    else:
+                        self._ring_rescue(o_send, blocks[o_send], seq)
+            if o_recv in ring:
+                blocks[o_recv] = self._frame_payload(
+                    self._take_frame(seq, o_recv))
+        out = []
+        for j in range(n):
+            if j == i:
+                out.append(self._decode_own(pl))
+            elif values[j] != protocol.PEER_SENT:
+                out.append(serialize.loads(values[j]))
+            else:
+                out.append(self._decode(blocks[j]))
+        return out
+
+    def _ring_rescue(self, origin: int, pl: _WirePayload, seq: int):
+        """The forward link is down: direct-ship ``origin``'s block to
+        every part downstream of here that has not seen it yet (best
+        effort — a part that gets nothing times out into the attempt-level
+        retry).  Duplicates a recovered neighbor may also deliver are
+        harmless: the mailbox keeps one copy per key and task-end purge
+        reclaims strays."""
+        self.p2p_fallbacks += 1
+        p = (self.part + 1) % self.n_parts
+        while p != origin:
+            self._ship(p, pl, seq, origin=origin)
+            p = (p + 1) % self.n_parts
 
     def all_to_all_arrays(self, chunks: list) -> list:
         """Personalized all-to-all of numpy column chunks — the shuffle
@@ -610,8 +930,48 @@ class ProcTaskComm:
         self.allgather(None)
 
     def bcast(self, obj, root: int = 0):
-        """Broadcast ``obj`` from part ``root`` to every part."""
-        return self.allgather(obj if self.part == root else None)[root]
+        """Broadcast ``obj`` from part ``root`` to every part: the root
+        fans its payload out down the tier ladder while non-root parts
+        contribute ZERO-BYTE tokens to the barrier frame — nobody pickles
+        or ships placeholder values, and each receiver decodes only the
+        root's entry instead of all P."""
+        if self.n_parts == 1:
+            if self.cancelled.is_set():
+                raise CollectiveError("task cancelled")
+            self._seq += 1
+            return serialize.copy_local(obj)
+        seq, self._seq = self._seq, self._seq + 1
+        rec = _spans.current_recorder()
+        pl = None
+        if self.part == root:
+            pl = self._encode(obj)
+            hub_payload = None
+            if self._peers_ok and pl.size > self.p2p_threshold:
+                with rec.span("p2p_send"):
+                    sent = True
+                    for p in range(self.n_parts):
+                        if p != root and not self._ship(p, pl, seq):
+                            sent = False
+                            break
+                if sent:
+                    hub_payload = protocol.PEER_SENT
+                else:
+                    self.p2p_fallbacks += 1
+            if hub_payload is None:
+                hub_payload = self._hub_form(pl, obj)
+        else:
+            hub_payload = b""        # control-only barrier contribution
+        self.hub_calls += 1
+        with rec.span("p2p_recv"):
+            values = self._hub.call(self.uid, self.attempt, seq, self.part,
+                                    hub_payload, self._coll_timeout)
+        if self.part == root:
+            return self._decode_own(pl)
+        v = values[root]
+        if v == protocol.PEER_SENT:
+            return self._decode(self._frame_payload(
+                self._take_frame(seq, root)))
+        return serialize.loads(v)
 
 
 class Worker:
@@ -678,8 +1038,12 @@ class Worker:
                     "hub_calls": comm.hub_calls if comm else 0,
                     "p2p_fallbacks": comm.p2p_fallbacks if comm else 0,
                     "spills": comm.spills if comm else 0,
+                    "raw_coll_bytes": comm.raw_coll_bytes if comm else 0,
+                    "shm_bytes": comm.shm_bytes if comm else 0,
+                    "ring_steps": comm.ring_steps if comm else 0,
                     "spans": rec.export()}
 
+        clean = False
         try:
             devs = self._local_devices(d["local_devices"], d["build_comm"])
             if d["build_comm"]:
@@ -704,6 +1068,8 @@ class Worker:
                                 peer_addrs=d.get("peer_addrs"),
                                 p2p_threshold=d.get("p2p_threshold", 1024),
                                 raw_frames=d.get("raw_frames", True),
+                                ring=d.get("ring", True),
+                                shm=d.get("shm", True),
                                 registry=_metrics.MetricsRegistry(
                                     parent=self.metrics))
             # the recorder is bound to THIS thread for the payload call, so
@@ -717,6 +1083,7 @@ class Worker:
             self.chan.send(protocol.PART_DONE, uid=uid, attempt=attempt,
                            part=part, result=serialize.dumps(res),
                            error=None, comm_build_s=comm_s, **stats())
+            clean = True
         except ConnectionClosed:
             pass                     # parent is gone; nothing to report to
         except Exception as e:  # noqa: BLE001 — report any payload error
@@ -731,8 +1098,11 @@ class Worker:
             self._tasks.pop((uid, attempt), None)
             self.hub.forget(uid, attempt)
             if self.peer_net is not None:
-                # parked peer frames of this attempt are unclaimable now
-                self.peer_net.purge(uid, attempt)
+                # parked peer frames of this attempt are unclaimable now; a
+                # failed/cancelled attempt also reclaims the shm segments
+                # this part sent — its receivers abort without consuming
+                self.peer_net.purge(uid, attempt,
+                                    failed=not clean or cancelled.is_set())
 
     def _log(self, msg: str):
         print(f"[worker {self.worker_id} pid={os.getpid()} "

@@ -706,12 +706,18 @@ class SchedulerSession:
         task.spills = ev.spills
         task.p2p_fallbacks = ev.p2p_fallbacks
         task.hub_relay_bytes = ev.hub_relay_bytes
+        task.raw_coll_bytes = ev.raw_coll_bytes
+        task.shm_bytes = ev.shm_bytes
+        task.ring_steps = ev.ring_steps
         # worker flight-recorder spans arrive piggybacked on the terminal
         # event, already aligned into this executor's clock
         self._record_spans(ev.spans)
         stats = {"hub_calls": ev.hub_calls,
                  "p2p_fallbacks": ev.p2p_fallbacks,
-                 "hub_relay_bytes": ev.hub_relay_bytes}
+                 "hub_relay_bytes": ev.hub_relay_bytes,
+                 "raw_coll_bytes": ev.raw_coll_bytes,
+                 "shm_bytes": ev.shm_bytes,
+                 "ring_steps": ev.ring_steps}
         if task.uid in self._ignored:
             self._ignored.discard(task.uid)
             self._dispatch()   # live twin finished after cancel: reclaim only
@@ -772,6 +778,9 @@ class SchedulerSession:
         target.spills = ev.spills
         target.p2p_fallbacks = ev.p2p_fallbacks
         target.hub_relay_bytes = ev.hub_relay_bytes
+        target.raw_coll_bytes = ev.raw_coll_bytes
+        target.shm_bytes = ev.shm_bytes
+        target.ring_steps = ev.ring_steps
         self._done_durations.setdefault(target.desc.name, []).append(
             now - target.start_time)
         self._tr("done", target, p2p=float(ev.p2p_bytes),

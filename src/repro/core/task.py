@@ -69,6 +69,11 @@ class Task:
     hub_relay_bytes: int = 0         # real payload bytes the hub relayed for
     # this task's collectives (peer-plane collectives contribute only the
     # tiny PEER_SENT marker; 0 on sim/thread backends)
+    raw_coll_bytes: int = 0          # collective bytes shipped with
+    # zero-copy raw framing (0 on sim/thread backends)
+    shm_bytes: int = 0               # payload bytes moved through same-host
+    # shared-memory segments (a subset of p2p_bytes)
+    ring_steps: int = 0              # ring-allgather block forwards paid
 
     @property
     def run_seconds(self) -> float:

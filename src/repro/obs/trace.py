@@ -99,6 +99,9 @@ class _TaskStub:
     spills: int = 0
     p2p_fallbacks: int = 0
     hub_relay_bytes: int = 0
+    raw_coll_bytes: int = 0
+    shm_bytes: int = 0
+    ring_steps: int = 0
 
 
 @dataclasses.dataclass
@@ -200,7 +203,10 @@ def load_trace(path: str) -> RecordedTrace:
                         hub_calls=int(d.get("hub_calls", 0)),
                         spills=int(ev.spills),
                         p2p_fallbacks=int(d.get("p2p_fallbacks", 0)),
-                        hub_relay_bytes=int(d.get("hub_relay_bytes", 0)))
+                        hub_relay_bytes=int(d.get("hub_relay_bytes", 0)),
+                        raw_coll_bytes=int(d.get("raw_coll_bytes", 0)),
+                        shm_bytes=int(d.get("shm_bytes", 0)),
+                        ring_steps=int(d.get("ring_steps", 0)))
             elif typ == "span":
                 spans.append(obj)
             elif typ == "telemetry":

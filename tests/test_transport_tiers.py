@@ -1,0 +1,466 @@
+"""Transport tiers for spanning collectives (PR 8).
+
+Covers the three tiers end to end: generic zero-copy raw framing
+(PEER_DATA_GEN), the wide-task ring allgather, and the same-host
+shared-memory handoff (PEER_DATA_SHM) — plus the invariants every tier must
+preserve: per-payload fallback ladder, bit-identical results across tiers,
+SIGKILL mid-collective -> targeted device_failure -> retry-with-exclusion,
+and zero ``/dev/shm`` residue after clean finish, retire, and kill.
+
+Wire-layer units (no subprocesses) stay in tier-1; everything spawning
+worker interpreters is ``integration`` (CI runs those in both halves of the
+``REPRO_SHM`` matrix).
+"""
+import signal
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ProcessExecutor, SchedulerSession, TaskDescription, TaskState,
+)
+from repro.core.executors import protocol, serialize
+from repro.core.executors import shm as shmseg
+from repro.core.executors.worker import _PeerNet
+
+if serialize.HAVE_CLOUDPICKLE:
+    import cloudpickle
+
+    cloudpickle.register_pickle_by_value(sys.modules[__name__])
+
+needs_cloudpickle = pytest.mark.skipif(
+    not serialize.HAVE_CLOUDPICKLE,
+    reason="cloudpickle needed to ship test-local payload functions")
+
+needs_dev_shm = pytest.mark.skipif(
+    not Path("/dev/shm").is_dir(),
+    reason="/dev/shm residue checks need a POSIX shm mount")
+
+
+# ---------------------------------------------------------------------------
+# serializer units: array-leaf splitting
+# ---------------------------------------------------------------------------
+def test_dumps_arrays_round_trip_is_bit_identical():
+    obj = {"m": np.arange(48, dtype=np.float32).reshape(6, 8),
+           "nested": [np.array([1, 2, 3], dtype=np.int64),
+                      ("txt", {"k": np.float64(2.5)})],
+           "plain": b"bytes-leaf"}
+    skel, metas, bufs = serialize.dumps_arrays(obj)
+    body = b"".join(memoryview(b).cast("B") for b in bufs)
+    back = serialize.loads_arrays(skel, metas, body)
+    assert back["m"].dtype == np.float32 and back["m"].shape == (6, 8)
+    assert back["m"].tobytes() == obj["m"].tobytes()
+    assert back["nested"][0].tobytes() == obj["nested"][0].tobytes()
+    assert back["nested"][1] == ("txt", {"k": np.float64(2.5)})
+    assert back["plain"] == b"bytes-leaf"
+    # received leaves are zero-copy views into the body: read-only
+    assert not back["m"].flags.writeable
+
+
+def test_dumps_arrays_declines_payloads_without_array_leaves():
+    assert serialize.dumps_arrays({"a": 1, "b": "x"}) is None
+    assert serialize.dumps_arrays(None) is None
+    # object-dtype arrays still need pickle: they must stay opaque leaves
+    obj_arr = np.array([{"k": 1}, "s"], dtype=object)
+    assert serialize.dumps_arrays([obj_arr]) is None
+
+
+def test_copy_local_is_writable_and_never_aliases():
+    src = {"m": np.zeros(16, dtype=np.float64), "t": (1, "x")}
+    cp = serialize.copy_local(src)
+    assert cp["m"] is not src["m"] and cp["t"] == (1, "x")
+    cp["m"][0] = 99.0                       # writable copy...
+    assert src["m"][0] == 0.0               # ...that never aliases the input
+
+
+# ---------------------------------------------------------------------------
+# wire-layer units: generic raw frames and shm frames between two nets
+# ---------------------------------------------------------------------------
+def test_peer_net_ships_generic_raw_frames():
+    a, b = _PeerNet("wa", token="t"), _PeerNet("wb", token="t")
+    a.start("127.0.0.1")
+    b.start("127.0.0.1")
+    obj = {"m": np.arange(1 << 16, dtype=np.int32), "meta": ["x", 7]}
+    skel, metas, bufs = serialize.dumps_arrays(obj)
+    assert a.send_kind("wb", b.data_addr, protocol.PEER_DATA_GEN, bufs=bufs,
+                       skel=skel, arrs=metas, uid=1, attempt=0, seq=0, part=0)
+    frame = b.take((1, 0, 0, 0), timeout=10)
+    assert frame["nbytes"] == obj["m"].nbytes
+    back = serialize.loads_arrays(frame["skel"], frame["arrs"],
+                                  frame["payload"])
+    assert back["meta"] == ["x", 7]
+    assert back["m"].tobytes() == obj["m"].tobytes()
+
+
+@needs_dev_shm
+def test_shm_segment_write_read_unlink_sweep():
+    name = shmseg.segment_name("tok12345", "w0")
+    assert name.startswith("repro_tok12345_w0_")
+    assert shmseg.write(name, [b"ab", b"cd"]) == 4   # multi-buffer body
+    assert shmseg.read(name) == b"abcd"
+    assert shmseg.unlink(name) is True
+    assert shmseg.unlink(name) is False     # idempotent
+    # sweep by prefix removes only matching residue
+    n1 = shmseg.segment_name("tok12345", "w1")
+    n2 = shmseg.segment_name("OTHERtok", "w1")
+    shmseg.write(n1, [b"x"])
+    shmseg.write(n2, [b"x"])
+    assert shmseg.sweep("repro_tok12345_") == 1
+    assert not (Path("/dev/shm") / n1).exists()
+    assert (Path("/dev/shm") / n2).exists()
+    shmseg.unlink(n2)
+
+
+@needs_dev_shm
+def test_peer_net_shm_frame_handoff_and_consume():
+    a, b = _PeerNet("wa", token="t"), _PeerNet("wb", token="t")
+    a.start("127.0.0.1")
+    b.start("127.0.0.1")
+    body = b"q" * 4096
+    name = shmseg.segment_name("t", "wa")
+    shmseg.write(name, [body])
+    assert a.send_kind("wb", b.data_addr, protocol.PEER_DATA_SHM, shm=name,
+                       nbytes=len(body), skel=None, arrs=None,
+                       uid=2, attempt=0, seq=0, part=0)
+    frame = b.take((2, 0, 0, 0), timeout=10)
+    # the receiving net consumed the segment EAGERLY: the parked frame
+    # carries the body and the /dev/shm entry is already gone
+    assert frame["payload"] == body and "shm" not in frame
+    assert not (Path("/dev/shm") / name).exists()
+
+
+@needs_dev_shm
+def test_purge_unlinks_parked_shm_frames():
+    """A parked shm frame whose attempt ends unconsumed must not leak its
+    segment: purge owns the cleanup for unclaimable mail."""
+    net = _PeerNet("w", token="t")
+    name = shmseg.segment_name("t", "w")
+    shmseg.write(name, [b"\x00" * 32])
+    net.put((5, 0, 0, 1), {"shm": name, "nbytes": 32})
+    net.purge(5, 0)
+    assert not (Path("/dev/shm") / name).exists()
+    # ...and a frame landing AFTER the purge (tombstoned) is reclaimed too
+    late = shmseg.segment_name("t", "w")
+    shmseg.write(late, [b"\x00" * 32])
+    net.put((5, 0, 1, 1), {"shm": late, "nbytes": 32})
+    assert not net._mail
+    assert not (Path("/dev/shm") / late).exists()
+
+
+@needs_dev_shm
+def test_purge_failed_reclaims_sent_segments():
+    """An aborted attempt's receivers raise without consuming, so the
+    SENDER's purge(failed=True) must reclaim its ledgered segments; a clean
+    finish leaves them to the receivers."""
+    net = _PeerNet("w", token="t")
+    kept = shmseg.segment_name("t", "w")
+    gone = shmseg.segment_name("t", "w")
+    shmseg.write(kept, [b"\x00" * 16])
+    shmseg.write(gone, [b"\x00" * 16])
+    net.record_segment(1, 0, kept)
+    net.record_segment(2, 0, gone)
+    net.purge(1, 0, failed=False)           # clean: receivers own cleanup
+    net.purge(2, 0, failed=True)            # aborted: sender reclaims
+    assert (Path("/dev/shm") / kept).exists()
+    assert not (Path("/dev/shm") / gone).exists()
+    shmseg.unlink(kept)
+
+
+# ---------------------------------------------------------------------------
+# payloads shipped to workers (module-level, pickled by value)
+# ---------------------------------------------------------------------------
+_ROWS = 32 << 10      # 32k float64 = 256 KiB, well above the 1 KiB threshold
+
+
+def _array_gather(comm, n_coll=2, rows=_ROWS):
+    """Each part allgathers a mixed container whose big leaf is an array;
+    verifies content and ordering, reports the transport counters."""
+    payload = {"m": np.full((rows,), float(comm.part), dtype=np.float64),
+               "tag": ("part", comm.part)}
+    for _ in range(n_coll):
+        vals = comm.allgather(payload)
+        assert len(vals) == comm.n_parts
+        for j, v in enumerate(vals):
+            assert v["tag"] == ("part", j)
+            assert v["m"].dtype == np.float64 and (v["m"] == float(j)).all()
+    comm.barrier()
+    return {"p2p_bytes": comm.p2p_bytes, "raw": comm.raw_coll_bytes,
+            "shm": comm.shm_bytes, "ring": comm.ring_steps,
+            "fallbacks": comm.p2p_fallbacks, "hub_calls": comm.hub_calls,
+            "n_parts": comm.n_parts}
+
+
+def _digest_gather(comm, rows=_ROWS):
+    """Deterministic digest of a gather + a wide bcast — the bit-identical
+    probe compared across every tier configuration."""
+    import hashlib
+    payload = {"m": np.arange(rows, dtype=np.int64) * (comm.part + 1),
+               "mix": [comm.part, "s", {"k": 1.5}, b"\x00\x80"]}
+    vals = comm.allgather(payload)
+    h = hashlib.sha256()
+    for v in vals:
+        h.update(np.ascontiguousarray(v["m"]).tobytes())
+        h.update(repr(v["mix"]).encode())
+    r = comm.bcast(np.arange(rows, dtype=np.float32) + 7.0,
+                   root=comm.n_parts - 1)
+    h.update(np.ascontiguousarray(r).tobytes())
+    return h.hexdigest()
+
+
+def _slow_gather(comm, n_coll=60, rows=_ROWS):
+    for _ in range(n_coll):
+        vals = comm.allgather(np.full((rows,), float(comm.part)))
+        assert (vals[-1] == float(comm.n_parts - 1)).all()
+        time.sleep(0.02)
+    return {"ring": comm.ring_steps, "shm": comm.shm_bytes,
+            "fallbacks": comm.p2p_fallbacks}
+
+
+def _wide_bcast(comm, rows=_ROWS):
+    """Two large bcasts from different roots; non-root contributions must
+    be control-only (zero hub relay) with the payload fanned out by the
+    root on the peer plane."""
+    for root in (0, comm.n_parts - 1):
+        m = comm.bcast(np.full((rows,), float(root)) if comm.part == root
+                       else None, root=root)
+        assert m.dtype == np.float64 and (m == float(root)).all()
+    return {"p2p_bytes": comm.p2p_bytes, "hub_calls": comm.hub_calls,
+            "shm": comm.shm_bytes, "fallbacks": comm.p2p_fallbacks}
+
+
+def _residue(ex) -> list:
+    """Live /dev/shm segments belonging to this pilot (by token prefix)."""
+    root = Path("/dev/shm")
+    if not root.is_dir() or not ex._token:
+        return []
+    return sorted(p.name for p in root.glob(f"repro_{ex._token[:8]}_*"))
+
+
+def _wait_no_residue(ex, timeout=6.0):
+    deadline = time.monotonic() + timeout
+    left = _residue(ex)
+    while left and time.monotonic() < deadline:
+        time.sleep(0.1)              # worker-side purge may still be running
+        left = _residue(ex)
+    return left
+
+
+def _exec(**kw):
+    kw.setdefault("devices_per_worker", 1)
+    kw.setdefault("build_comm", False)
+    kw.setdefault("heartbeat_interval", 0.2)
+    kw.setdefault("tick", 0.02)
+    return ProcessExecutor(**kw)
+
+
+def _run_one(ex, fn, ranks, timeout=120, **kwargs):
+    sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02)
+    rep = sess.run([TaskDescription(name=fn.__name__, ranks=ranks, fn=fn,
+                                    kwargs=kwargs, tags={"pipeline": "p"})],
+                   timeout=timeout)
+    task = rep.tasks[0]
+    assert task.state == TaskState.DONE, task.error
+    return rep, task
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (subprocess-spawning)
+# ---------------------------------------------------------------------------
+@needs_cloudpickle
+@pytest.mark.integration
+def test_generic_allgather_ships_raw_frames():
+    """Array-leaf payloads must move as zero-copy raw frames, not pickle:
+    raw_coll_bytes covers (at least) the array bodies, end to end through
+    PART_DONE accounting up to the executor totals."""
+    with _exec(n_workers=2, shm=False) as ex:
+        rep, task = _run_one(ex, _array_gather, ranks=2, n_coll=2)
+        stats = task.result
+        body = _ROWS * 8
+        assert stats["raw"] >= 2 * body          # 2 colls x 1 peer each
+        assert stats["shm"] == 0 and stats["fallbacks"] == 0
+        assert ex.raw_coll_bytes == task.raw_coll_bytes > 0
+        assert ex.shm_bytes == 0
+        # the barrier token stays pickled-inline: raw never covers it
+        assert stats["p2p_bytes"] >= stats["raw"]
+
+
+@needs_cloudpickle
+@needs_dev_shm
+@pytest.mark.integration
+def test_shm_tier_carries_same_host_payloads_and_leaves_no_residue(
+        monkeypatch):
+    """Same-host peers must hand payload bodies through shared memory
+    (shm_bytes > 0, a subset of p2p_bytes) and leave /dev/shm clean after
+    the run and after shutdown."""
+    monkeypatch.setenv("REPRO_SHM", "1")         # pin: CI runs both halves
+    with _exec(n_workers=2) as ex:
+        assert ex.shm is True                    # env knob resolution
+        rep, task = _run_one(ex, _array_gather, ranks=2, n_coll=3)
+        stats = task.result
+        body = _ROWS * 8
+        assert stats["shm"] >= 3 * body
+        assert stats["fallbacks"] == 0
+        # result carries ONE part's counters; executor totals sum both parts
+        assert task.shm_bytes == ex.shm_bytes == 2 * stats["shm"]
+        assert ex.shm_bytes <= ex.p2p_bytes
+        assert _wait_no_residue(ex) == []        # receivers consumed all
+    assert _residue(ex) == []                    # shutdown sweep safety net
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_ring_allgather_on_wide_task():
+    """4 parts >= RING_MIN_PARTS: blocks move around the ring (P-1 forwards
+    per part per collective) instead of direct all-to-all, with correct,
+    part-ordered results."""
+    with _exec(n_workers=4) as ex:
+        rep, task = _run_one(ex, _array_gather, ranks=4, n_coll=2)
+        stats = task.result
+        assert stats["n_parts"] == 4
+        # every part forwarded P-1 = 3 blocks per collective (2 of them)
+        assert task.ring_steps == 4 * 3 * 2
+        assert stats["fallbacks"] == 0
+        assert ex.ring_steps == task.ring_steps
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_results_bit_identical_across_all_tier_configs():
+    """The fallback ladder acceptance: every knob combination — shm off,
+    ring off, raw framing off, whole peer plane off — must produce the
+    byte-for-byte identical collective results."""
+    digests = {}
+    configs = {"full": {}, "no_shm": {"shm": False},
+               "no_ring": {"ring": False},
+               "pickled": {"raw_frames": False, "shm": False},
+               "hub_only": {"p2p": False}}
+    for name, kw in configs.items():
+        with _exec(n_workers=4, **kw) as ex:
+            rep, task = _run_one(ex, _digest_gather, ranks=4)
+            digests[name] = task.result
+            if name == "no_ring":
+                assert ex.ring_steps == 0
+            if name in ("no_shm", "pickled", "hub_only"):
+                assert ex.shm_bytes == 0
+            if name in ("pickled", "hub_only"):
+                assert ex.raw_coll_bytes == 0
+    assert len(set(digests.values())) == 1, digests
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_mixed_raw_and_pickled_payloads_in_one_task(monkeypatch):
+    """Within one task some collectives have array leaves (raw tier) and
+    some do not (pickled tier); REPRO_SHM=0 must also hold as the env
+    knob.  _digest_gather mixes both shapes in a single allgather."""
+    monkeypatch.setenv("REPRO_SHM", "0")
+    with _exec(n_workers=2) as ex:
+        assert ex.shm is False                   # env knob resolution
+        rep, task = _run_one(ex, _digest_gather, ranks=2)
+        assert ex.shm_bytes == 0
+        assert ex.raw_coll_bytes > 0             # arrays still went raw
+        assert ex.hub_relay_bytes < 1024         # bodies stayed off the hub
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_bcast_root_fanout_keeps_hub_control_only():
+    """Non-root bcast parts contribute zero-byte control frames: the hub
+    must relay NO payload bytes for a wide peer-plane bcast, and every
+    receiver still gets the root's array."""
+    with _exec(n_workers=3) as ex:
+        rep, task = _run_one(ex, _wide_bcast, ranks=3)
+        stats = task.result
+        assert stats["fallbacks"] == 0
+        assert ex.hub_relay_bytes == 0           # placeholders + b"" only
+        # only the roots fanned out: 2 bcasts x 2 peers x one body each
+        # (executor totals — a single part only sees its own root fanout)
+        assert ex.p2p_bytes >= 2 * 2 * _ROWS * 8
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_sigkill_mid_ring_recovers_via_retry_with_exclusion():
+    """SIGKILL a worker while a wide task streams ring collectives: the
+    loss surfaces as one targeted device_failure, and the retry (still
+    >= RING_MIN_PARTS survivors: the ring again) completes with exclusion."""
+    with _exec(n_workers=5) as ex:
+        rm = ex.resource_manager()
+        sess = SchedulerSession(ex, rm, tick=0.02)
+        sess.submit([TaskDescription(name="victim", ranks=4, fn=_slow_gather,
+                                     max_retries=2, tags={"pipeline": "p"})])
+        time.sleep(0.6)              # mid-stream: several colls in flight
+        victim = sorted({d.worker for d in
+                         next(iter(ex._running.values())).task.devices})[0]
+        ex.kill_worker(victim, signal.SIGKILL)
+        rep = sess.drain(timeout=120).close()
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE, task.error
+        fails = rep.events("device_failure")
+        assert len(fails) == 1 and fails[0].value == 1.0
+        assert task.retries >= 1
+        assert any(d.worker == victim for d in task.excluded_devices)
+        assert victim not in {d.worker for d in task.devices}
+        assert task.result["fallbacks"] == 0     # fresh retry, clean ring
+        assert rm.total == 4
+
+
+@needs_cloudpickle
+@needs_dev_shm
+@pytest.mark.integration
+def test_sigkill_mid_shm_handoff_recovers_and_reclaims_segments(monkeypatch):
+    """SIGKILL mid shm-handoff: retry-with-exclusion completes on the
+    survivors (their own shm tier again) and NO segment of the pilot
+    leaks — survivors purge their aborted attempt, the parent sweeps the
+    dead worker's prefix."""
+    monkeypatch.setenv("REPRO_SHM", "1")
+    with _exec(n_workers=3) as ex:
+        rm = ex.resource_manager()
+        sess = SchedulerSession(ex, rm, tick=0.02)
+        sess.submit([TaskDescription(name="victim", ranks=2, fn=_slow_gather,
+                                     max_retries=2, tags={"pipeline": "p"})])
+        time.sleep(0.5)
+        victim = sorted({d.worker for d in
+                         next(iter(ex._running.values())).task.devices})[0]
+        ex.kill_worker(victim, signal.SIGKILL)
+        rep = sess.drain(timeout=120).close()
+        task = rep.tasks[0]
+        assert task.state == TaskState.DONE, task.error
+        assert task.retries >= 1
+        assert any(d.worker == victim for d in task.excluded_devices)
+        assert task.result["shm"] > 0            # the retry used shm again
+        assert _wait_no_residue(ex) == []        # no leaked segments
+    assert _residue(ex) == []
+
+
+@needs_cloudpickle
+@needs_dev_shm
+@pytest.mark.integration
+def test_retire_worker_leaves_no_shm_residue(monkeypatch):
+    """A graceful retire (drain) after shm-heavy traffic must leave
+    /dev/shm clean: consumed segments are gone and the retiree's prefix is
+    swept on dismissal."""
+    monkeypatch.setenv("REPRO_SHM", "1")
+    with _exec(n_workers=2) as ex:
+        rep, task = _run_one(ex, _array_gather, ranks=2, n_coll=3)
+        assert task.result["shm"] > 0
+        ex.retire_worker("w1")
+        assert _wait_no_residue(ex) == []
+    assert _residue(ex) == []
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_ring_knob_reverts_to_direct(monkeypatch):
+    """REPRO_RING=0 keeps wide tasks on the direct path — zero ring steps,
+    same results, raw framing still on."""
+    monkeypatch.setenv("REPRO_RING", "0")
+    with _exec(n_workers=4) as ex:
+        assert ex.ring is False
+        rep, task = _run_one(ex, _array_gather, ranks=4, n_coll=2)
+        assert task.ring_steps == 0 and ex.ring_steps == 0
+        assert task.result["fallbacks"] == 0
+        assert ex.raw_coll_bytes > 0
