@@ -500,6 +500,143 @@ def trace_overhead(n_tasks: int = 12, repeats: int = 3):
     return out
 
 
+def _poisson_arrivals(n: int, mean_gap_s: float, seed: int = 7):
+    """Open-loop Poisson arrival offsets: exponential inter-arrival gaps,
+    cumulative from t=0.  Open-loop means the schedule never waits for the
+    server — a slow server accumulates backlog instead of slowing arrivals,
+    which is what makes the latency percentiles honest."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(mean_gap_s, n))
+
+
+def serve_compare(n_requests: int = 64, mean_gap_s: float = 0.0005):
+    """Continuous batching vs the static-batch baseline (BENCH_SERVE=1): the
+    SAME open-loop Poisson request stream — mixed prompt lengths {3, 5},
+    mixed budgets (1 in 4 requests wants 24 tokens, the rest want 2) — served
+    by both engines over the same model/params.  The static engine groups by
+    prompt length and decodes every group to its LONGEST member before
+    draining; the continuous engine frees a slot the moment a request
+    finishes and admits mid-decode, so short requests stop paying for long
+    neighbours.  Reported per mode: req/s and p50/p99 request latency
+    (finish wall - arrival wall); outputs are asserted bit-identical across
+    engines.  Acceptance key in ``benchmarks/artifacts/serve_summary.json``:
+    continuous >= 1.3x static throughput."""
+    import dataclasses
+    import time as _t
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    from repro.serve import ContinuousEngine, Request, ServeEngine
+
+    cfg = dataclasses.replace(reduced(get_config("granite-3-8b")), n_layers=2)
+    api = get_model(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    max_batch, max_seq = 4, 64
+    rng = np.random.default_rng(1)
+    plens = rng.choice([3, 5], n_requests)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, int(L))
+                    .astype(np.int32),
+                    max_new_tokens=(24 if i % 4 == 0 else 2), uid=i)
+            for i, L in enumerate(plens)]
+    arrivals = _poisson_arrivals(n_requests, mean_gap_s)
+
+    eng_s = ServeEngine(cfg, params, max_batch=max_batch, max_seq=max_seq)
+    eng_c = ContinuousEngine(cfg, params, max_batch=max_batch,
+                             max_seq=max_seq)
+    # warm-up: compile every shape either engine can hit, so the measured
+    # loops pay dispatch cost only.  Static compiles per (batch, prompt_len)
+    # prefill and per batch-width decode; continuous compiles exactly one
+    # prefill per prompt_len (batch 1), one decode, one insert.
+    for plen in (3, 5):
+        for b in range(1, max_batch + 1):
+            eng_s._run_batch([Request(prompt=np.zeros(plen, np.int32),
+                                      max_new_tokens=1, uid=-1)] * b)
+        eng_c.run([Request(prompt=np.zeros(plen, np.int32),
+                           max_new_tokens=2, uid=-1)])
+    eng_c.results.clear()
+    eng_c.evicted.clear()
+
+    def run_static():
+        latency, outputs, backlog, i = {}, {}, [], 0
+        t0 = _t.perf_counter()
+        while len(latency) < n_requests:
+            now = _t.perf_counter() - t0
+            while i < n_requests and arrivals[i] <= now:
+                backlog.append(reqs[i])
+                i += 1
+            if not backlog:
+                _t.sleep(max(arrivals[i] - now, 0.0))
+                continue
+            # static admission: the largest same-prompt-length group that has
+            # arrived (causal prefill forbids mixing lengths), up to max_batch
+            by_len: dict[int, list] = {}
+            for r in backlog:
+                by_len.setdefault(len(r.prompt), []).append(r)
+            group = max(by_len.values(), key=len)[:max_batch]
+            taken = {id(r) for r in group}
+            backlog = [r for r in backlog if id(r) not in taken]
+            out = eng_s._run_batch(group)
+            tdone = _t.perf_counter() - t0
+            outputs.update(out)
+            for uid in out:
+                latency[uid] = tdone - arrivals[uid]
+        return latency, outputs, _t.perf_counter() - t0
+
+    def run_continuous():
+        latency, i = {}, 0
+        t0 = _t.perf_counter()
+        while len(latency) < n_requests:
+            now = _t.perf_counter() - t0
+            while i < n_requests and arrivals[i] <= now:
+                eng_c.submit(reqs[i])
+                i += 1
+            if eng_c.outstanding == 0:
+                _t.sleep(max(arrivals[i] - now, 0.0))
+                continue
+            for r in eng_c.step():
+                latency[r.uid] = (_t.perf_counter() - t0) - arrivals[r.uid]
+        return latency, dict(eng_c.results), _t.perf_counter() - t0
+
+    rows = []
+    results = {}
+    for mode, runner in (("static", run_static),
+                         ("continuous", run_continuous)):
+        latency, outputs, wall = runner()
+        results[mode] = outputs
+        lats = sorted(latency.values())
+        row = {"mode": mode, "wall_s": wall,
+               "req_per_s": n_requests / wall,
+               "p50_latency_s": lats[len(lats) // 2],
+               "p99_latency_s": lats[min(int(len(lats) * 0.99),
+                                         len(lats) - 1)]}
+        rows.append(row)
+        emit(f"serve/{mode}/req_per_s", row["req_per_s"] * 1e6,
+             f"p50_s={row['p50_latency_s']:.4f};"
+             f"p99_s={row['p99_latency_s']:.4f};n={n_requests}")
+    # the two engines must agree token-for-token before throughput means
+    # anything
+    for r in reqs:
+        np.testing.assert_array_equal(results["static"][r.uid],
+                                      results["continuous"][r.uid])
+    speedup = rows[1]["req_per_s"] / max(rows[0]["req_per_s"], 1e-9)
+    emit("serve/speedup_continuous_over_static", speedup * 1e6,
+         "req_per_s ratio;acceptance_bar=1.3")
+    out = {"model": "granite-3-8b reduced n_layers=2",
+           "n_requests": n_requests, "max_batch": max_batch,
+           "max_seq": max_seq, "arrival_mean_gap_s": mean_gap_s,
+           "rows": rows, "speedup_continuous_over_static": speedup,
+           "acceptance": {"min_speedup": 1.3, "meets_bar": speedup >= 1.3}}
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "serve_summary.json").write_text(
+        json.dumps(out, indent=2, default=str))
+    assert speedup >= 1.3, f"continuous vs static speedup {speedup:.2f} < 1.3"
+    return out
+
+
 def run():
     res = {}
     if os.environ.get("BENCH_REAL", "1") == "1":
@@ -539,6 +676,10 @@ def run():
     if os.environ.get("BENCH_TRACE", "0") == "1" or "--trace" in sys.argv:
         # opt-in: flight-recorder on/off A/B (spans + telemetry + JSONL)
         res["trace"] = trace_overhead()
+    if os.environ.get("BENCH_SERVE", "0") == "1" or "--serve" in sys.argv:
+        # opt-in: continuous batching vs static batch on the same Poisson
+        # request stream (req/s + latency percentiles)
+        res["serve"] = serve_compare()
     return res
 
 

@@ -1,5 +1,10 @@
-"""Serving example: batched requests through the engine, scheduled as a task
-on the pilot runtime next to an ETL task (MPMD heterogeneous execution).
+"""Serving example, in two acts on the same pilot runtime:
+
+1. the STATIC engine as one opaque task next to an ETL task (MPMD
+   heterogeneous execution — the original demo);
+2. the CONTINUOUS engine through ``ServeDriver``: prefill and decode as
+   separately-tagged scheduler pipelines, serve telemetry in the session
+   trace, and a ``ServeAutoscaler`` watching the queue/slot gauges.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,10 +15,13 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core import (PilotDescription, PilotManager, RaptorMaster,
-                        TaskDescription)
+                        ResourceManager, SchedulerSession, TaskDescription,
+                        ThreadExecutor)
 from repro.dataframe import ops_dist as D
 from repro.models import get_model
-from repro.serve.engine import Request, ServeEngine, greedy_reference
+from repro.serve import (AutoscaleConfig, ContinuousEngine, Request,
+                         ServeAutoscaler, ServeDriver, ServeEngine,
+                         greedy_reference)
 
 
 def main():
@@ -55,6 +63,28 @@ def main():
     ref = greedy_reference(cfg, params, requests[0].prompt, 8)
     assert (serve_out[0] == ref).all()
     print("generated (req 0):", serve_out[0].tolist(), "== oracle ✓")
+
+    # -- act 2: continuous batching as scheduler pipelines ----------------
+    engine = ContinuousEngine(cfg, params, max_batch=2, max_seq=32)
+    ex = ThreadExecutor(build_comm=False, tick=0.01)
+    sess = SchedulerSession(ex, ResourceManager(["d0", "d1"]), tick=0.01)
+    autoscaler = ServeAutoscaler(
+        grow=lambda: ex.inject_grow([f"g{len(autoscaler.actions)}"]),
+        retire=lambda: None,
+        config=AutoscaleConfig(queue_high=2, sustain_s=0.01,
+                               cooldown_s=0.05, max_workers=2))
+    driver = ServeDriver(engine, sess, autoscaler=autoscaler)
+    out = driver.run(requests, timeout=300)
+    rep = sess.drain(timeout=60).close()
+    for r in requests:
+        ref = greedy_reference(cfg, params, r.prompt, r.max_new_tokens)
+        assert (out[r.uid] == ref).all()
+    pipes = sorted({e.pipeline for e in rep.trace if e.kind == "dispatch"})
+    tel = [e for e in rep.trace if e.kind == "telemetry"]
+    print(f"[continuous] {len(out)} requests through pipelines {pipes}, "
+          f"{engine.metrics.get('serve_decode_steps')} decode rounds, "
+          f"{len(tel)} telemetry events, "
+          f"{len(autoscaler.actions)} autoscale actions == oracle ✓")
 
 
 if __name__ == "__main__":

@@ -97,8 +97,20 @@ def interleave_by_pipeline(tasks):
 
 # ---------------------------------------------------------------------------
 # event trace — one schema for sim and live, consumed by benchmarks/ and
-# SimReport (schema documented in ROADMAP.md §Runtime architecture)
+# SimReport (schema documented in docs/ARCHITECTURE.md)
 # ---------------------------------------------------------------------------
+
+#: The closed vocabulary of ``TraceEvent.kind``.  Every ``_tr()`` call in
+#: this module emits one of these, and docs/ARCHITECTURE.md documents each —
+#: the docs-honesty check (tests/test_docs.py) holds both sides to it, so a
+#: new kind cannot ship undeclared or undocumented.
+TRACE_EVENT_KINDS = frozenset({
+    "submit", "dispatch", "comm_build", "done", "fail", "retry", "speculate",
+    "cancel", "device_failure", "steal", "return", "grow", "retire",
+    "telemetry",
+})
+
+
 @dataclasses.dataclass
 class TraceEvent:
     t: float          # executor clock (virtual seconds or perf_counter)
@@ -447,6 +459,20 @@ class SchedulerSession:
         self.drain(timeout=timeout)
         return self.close()
 
+    def record_telemetry(self, snapshot: dict, worker: str = "app"):
+        """Public telemetry hook: surface an application-level gauge/counter
+        snapshot (e.g. the serve tier's queue depth and slot occupancy) as a
+        ``telemetry`` TraceEvent — the SAME stream worker heartbeats feed,
+        so the flight recorder, ``load_trace`` and the Perfetto exporter
+        pick application gauges up with zero extra plumbing."""
+        rec = dict(snapshot)
+        rec.setdefault("t", self.executor.now())
+        rec.setdefault("worker", worker)
+        self.telemetry.append(rec)
+        self._tr("telemetry", t=rec["t"], data=rec)
+        if self._writer is not None:
+            self._writer.telemetry(rec)
+
     # -- internals --------------------------------------------------------
     def _allocate(self, pool: ResourceManager, n: int, exclude) -> tuple:
         """All scheduler allocations flow through the placement layer: the
@@ -641,10 +667,7 @@ class SchedulerSession:
             rec = dict(ev.telemetry or {})
             rec.setdefault("t", now)
             rec["worker"] = ev.worker
-            self.telemetry.append(rec)
-            self._tr("telemetry", t=rec["t"], data=rec)
-            if self._writer is not None:
-                self._writer.telemetry(rec)
+            self.record_telemetry(rec, worker=ev.worker)
             return []
         if ev.kind == "grow":
             # elastic grow: the executor (ProcessExecutor.add_worker /

@@ -1,0 +1,13 @@
+"""Serving tier: static-batch baseline, continuous-batching engine, the
+scheduler-task driver, and the telemetry-driven autoscaler."""
+from repro.serve.autoscale import AutoscaleConfig, ServeAutoscaler
+from repro.serve.continuous import Admission, ContinuousEngine, cache_batch_axes
+from repro.serve.driver import ServeDriver
+from repro.serve.engine import (Request, ServeEngine, greedy_reference,
+                                modal_dummy_inputs, prompt_prefix_len)
+
+__all__ = [
+    "Admission", "AutoscaleConfig", "ContinuousEngine", "Request",
+    "ServeAutoscaler", "ServeDriver", "ServeEngine", "cache_batch_axes",
+    "greedy_reference", "modal_dummy_inputs", "prompt_prefix_len",
+]

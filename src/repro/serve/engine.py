@@ -1,10 +1,13 @@
-"""Batched serving engine: prefill + greedy decode with a padded KV cache and
-per-sequence positions (slots advance independently, so a static batch serves
-requests of different lengths).
+"""Serving engines.  This module holds the STATIC-batch baseline
+(``ServeEngine``: requests grouped by prompt length, one prefill + decode
+loop per group — the whole batch drains before the next group starts) plus
+the pieces it shares with the continuous-batching engine
+(``repro.serve.continuous.ContinuousEngine``): the ``Request`` record, the
+modal dummy-input builder, and the ``greedy_reference`` oracle.
 
-The engine is an SPMD payload like any other: the runtime can schedule
-`ServeEngine.run_requests` as a task on a private sub-mesh next to ETL and
-training tasks (examples/serve_lm.py).
+Both engines are SPMD payloads like any other: the runtime can schedule
+generation as tasks on private sub-meshes next to ETL and training tasks
+(examples/serve_lm.py, ``repro.serve.driver.ServeDriver``).
 """
 from __future__ import annotations
 
@@ -25,6 +28,30 @@ class Request:
     prompt: np.ndarray          # (prompt_len,) int32
     max_new_tokens: int = 16
     uid: int = 0
+
+
+def modal_dummy_inputs(cfg: ModelConfig, batch_size: int) -> dict:
+    """Zero-filled placeholder modal inputs for a ``batch_size`` batch: the
+    vision/audio frontends are stubs per the assignment, so vlm prompts carry
+    all-zero patch embeddings and audio prompts all-zero frame embeddings.
+    Shared by both engines and the oracle so the placeholders can never
+    drift apart between them."""
+    extras = {}
+    if cfg.family == "vlm":
+        extras["prefix_embeds"] = jnp.zeros(
+            (batch_size, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        extras["frames"] = jnp.zeros(
+            (batch_size, cfg.n_encoder_frames, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    return extras
+
+
+def prompt_prefix_len(cfg: ModelConfig) -> int:
+    """Positions a prompt's KV entries start AFTER: vlm patch embeddings are
+    prepended to the token stream, so generation positions are offset by
+    ``n_patches``; every other family starts at 0."""
+    return cfg.n_patches if cfg.family == "vlm" else 0
 
 
 class ServeEngine:
@@ -57,17 +84,10 @@ class ServeEngine:
         b = len(requests)
         plen = len(requests[0].prompt)
         toks = jnp.asarray(np.stack([r.prompt for r in requests]).astype(np.int32))
-        batch = {"tokens": toks}
-        if self.cfg.family == "vlm":
-            batch["prefix_embeds"] = jnp.zeros(
-                (b, self.cfg.n_patches, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
-        if self.cfg.family == "audio":
-            batch["frames"] = jnp.zeros(
-                (b, self.cfg.n_encoder_frames, self.cfg.d_model),
-                jnp.dtype(self.cfg.dtype))
+        batch = {"tokens": toks, **modal_dummy_inputs(self.cfg, b)}
         cache, logits = self._prefill(self.params, batch)
 
-        prefix = self.cfg.n_patches if self.cfg.family == "vlm" else 0
+        prefix = prompt_prefix_len(self.cfg)
         positions = np.full((b,), prefix + plen, np.int32)
         max_new = max(r.max_new_tokens for r in requests)
         gen = np.zeros((b, max_new), np.int32)
@@ -87,13 +107,8 @@ def greedy_reference(cfg, params, prompt: np.ndarray, n_new: int):
     api = registry.get_model(cfg)
     toks = list(map(int, prompt))
     for _ in range(n_new):
-        batch = {"tokens": jnp.asarray(np.asarray(toks, np.int32)[None])}
-        if cfg.family == "vlm":
-            batch["prefix_embeds"] = jnp.zeros((1, cfg.n_patches, cfg.d_model),
-                                               jnp.dtype(cfg.dtype))
-        if cfg.family == "audio":
-            batch["frames"] = jnp.zeros((1, cfg.n_encoder_frames, cfg.d_model),
-                                        jnp.dtype(cfg.dtype))
+        batch = {"tokens": jnp.asarray(np.asarray(toks, np.int32)[None]),
+                 **modal_dummy_inputs(cfg, 1)}
         logits = api.forward(params, cfg, batch)
         toks.append(int(jnp.argmax(logits[0, -1])))
     return np.asarray(toks[len(prompt):], np.int32)

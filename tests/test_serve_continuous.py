@@ -1,0 +1,193 @@
+"""Continuous batching: token streams bit-identical to the full-forward
+oracle under staggered admission and slot reuse; sequence-budget eviction;
+the sustained-pressure autoscaler (fake clock + live ThreadExecutor); and
+the serve-as-scheduler-tasks driver sharing a session with ETL work."""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import (ResourceManager, SchedulerSession, TaskDescription,
+                        TaskState, ThreadExecutor)
+from repro.models import get_model
+from repro.serve import (AutoscaleConfig, ContinuousEngine, Request,
+                         ServeAutoscaler, ServeDriver, greedy_reference)
+
+
+def _make(arch, seed=0):
+    cfg = dataclasses.replace(reduced(get_config(arch)), n_layers=2)
+    api = get_model(cfg)
+    return cfg, api.init(jax.random.key(seed), cfg)
+
+
+def _reqs(cfg, spec, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, L)
+                    .astype(np.int32), max_new_tokens=m, uid=i)
+            for i, (L, m) in enumerate(spec)]
+
+
+def _check_oracle(cfg, params, reqs, out):
+    for r in reqs:
+        ref = greedy_reference(cfg, params, r.prompt, r.max_new_tokens)
+        np.testing.assert_array_equal(out[r.uid], ref)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "falcon-mamba-7b",
+                                  "qwen2-moe-a2.7b", "whisper-medium",
+                                  "internvl2-1b"])
+def test_staggered_admission_matches_oracle(arch):
+    """max_batch=2 over 5 mixed-length / mixed-budget requests forces the
+    continuous path: requests admitted mid-decode into slots whose
+    neighbour is at a different position, and slots reused across requests.
+    Every stream must equal the full-forward oracle bit for bit."""
+    cfg, params = _make(arch)
+    eng = ContinuousEngine(cfg, params, max_batch=2, max_seq=48)
+    reqs = _reqs(cfg, [(3, 4), (2, 6), (5, 3), (3, 2), (4, 5)])
+    out = eng.run(reqs)
+    _check_oracle(cfg, params, reqs, out)
+    snap = eng.metrics.snapshot()
+    assert snap["serve_admitted"] == 5 and snap["serve_completed"] == 5
+    assert snap["serve_slots_active"] == 0 and snap["serve_queue_depth"] == 0
+
+
+def test_mixed_budgets_and_immediate_completion():
+    """Mixed max_new_tokens on one engine: a short request finishing early
+    frees its slot for the queue while long neighbours keep decoding, and a
+    max_new_tokens=1 request completes at admission without ever taking a
+    slot (the prefill logits are the whole generation)."""
+    cfg, params = _make("granite-3-8b")
+    eng = ContinuousEngine(cfg, params, max_batch=3, max_seq=32)
+    reqs = _reqs(cfg, [(2, 8), (5, 1), (3, 2), (2, 5), (4, 1), (3, 7),
+                       (2, 3)])
+    out = eng.run(reqs)
+    assert set(out) == set(range(7))
+    _check_oracle(cfg, params, reqs, out)
+    assert eng.metrics.get("serve_decode_steps") >= 7   # longest stream
+    assert eng.metrics.get("serve_prefill_tokens") == \
+        sum(len(r.prompt) for r in reqs)
+
+
+def test_sequence_budget_eviction():
+    """A request whose prefix + prompt + budget overflows max_seq is evicted
+    at admission control — never queued, never decoded — and the rest of
+    the stream is served normally."""
+    cfg, params = _make("granite-3-8b")
+    eng = ContinuousEngine(cfg, params, max_batch=2, max_seq=16)
+    reqs = _reqs(cfg, [(3, 4), (8, 12), (2, 3)])   # 8+12 > 16: evicted
+    out = eng.run(reqs)
+    assert eng.evicted == [1] and 1 not in out
+    assert eng.metrics.get("serve_evicted") == 1
+    _check_oracle(cfg, params, [reqs[0], reqs[2]], out)
+
+
+def test_autoscaler_policy_fake_clock():
+    """Policy unit-test on a fake clock: conditions must SUSTAIN before an
+    action fires, a condition flip resets the onset, cooldown separates
+    actions, worker bounds gate, and a failing callback is advisory."""
+    t = [0.0]
+    calls = []
+    cfg = AutoscaleConfig(queue_high=3, idle_frac=0.25, sustain_s=1.0,
+                          cooldown_s=5.0, min_workers=1, max_workers=2)
+    asc = ServeAutoscaler(lambda: calls.append("grow"),
+                          lambda: calls.append("retire"),
+                          cfg, workers=1, clock=lambda: t[0])
+    assert asc.observe(10, 4, 4) is None          # backlog onset
+    t[0] = 0.9
+    assert asc.observe(0, 0, 4) is None           # flip to idle: reset onset
+    t[0] = 1.2
+    assert asc.observe(10, 4, 4) is None          # backlog onset again
+    t[0] = 1.9
+    assert asc.observe(10, 4, 4) is None          # not sustained yet
+    t[0] = 2.5
+    assert asc.observe(10, 4, 4) == "grow"        # sustained 1.3s >= 1.0
+    assert asc.workers == 2 and calls == ["grow"]
+    t[0] = 4.0
+    assert asc.observe(10, 4, 4) is None          # cooldown + max_workers
+    t[0] = 8.0
+    assert asc.observe(10, 4, 4) is None          # past cooldown: bound gates
+    assert asc.observe(0, 0, 4) is None           # idle onset
+    t[0] = 9.5
+    assert asc.observe(0, 0, 4) == "retire"       # sustained + past cooldown
+    assert asc.workers == 1 and calls == ["grow", "retire"]
+    t[0] = 20.0
+    assert asc.observe(0, 0, 4) is None           # min_workers gates
+    # a raising callback is swallowed and counts nothing
+    boom = ServeAutoscaler(lambda: 1 / 0, lambda: 1 / 0,
+                           dataclasses.replace(cfg, cooldown_s=0.0),
+                           workers=1, clock=lambda: t[0])
+    boom.observe(10, 4, 4)
+    t[0] = 25.0
+    assert boom.observe(10, 4, 4) is None and boom.workers == 1
+
+
+def test_serve_driver_tasks_bit_identical():
+    """The driver serves through scheduler tasks — prefill and decode as
+    separately-tagged pipelines sharing the session with an ETL pipeline —
+    and the streams still match the oracle.  Serve telemetry lands in the
+    session's trace under the driver's worker id."""
+    cfg, params = _make("qwen3-8b")
+    eng = ContinuousEngine(cfg, params, max_batch=2, max_seq=32)
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01),
+                            ResourceManager(["d0", "d1", "d2"]), tick=0.01)
+    sess.submit([TaskDescription(name=f"etl{i}", ranks=1,
+                                 fn=lambda c: sum(range(1000)),
+                                 tags={"pipeline": "etl"})
+                 for i in range(3)])
+    driver = ServeDriver(eng, sess, telemetry_interval=0.0)
+    reqs = _reqs(cfg, [(3, 4), (2, 6), (4, 3), (3, 1), (2, 2)])
+    out = driver.run(reqs, timeout=300)
+    _check_oracle(cfg, params, reqs, out)
+    rep = sess.drain(timeout=60).close()
+    assert all(t.state is TaskState.DONE for t in rep.tasks)
+    pipes = {e.pipeline for e in rep.trace if e.kind == "dispatch"}
+    assert {"serve-prefill", "serve-decode", "etl"} <= pipes
+    tel = [e.data for e in rep.trace if e.kind == "telemetry"
+           and e.data.get("worker") == "serve-driver"]
+    assert tel and "serve_slot_occupancy" in tel[-1]
+    assert tel[-1]["serve_completed"] == len(reqs)
+
+
+def test_autoscale_integration_grow_then_retire():
+    """Live elastic loop on ThreadExecutor: a sustained backlog (8 requests
+    vs 2 slots) makes the autoscaler grow the pool (``inject_grow`` ->
+    ``grow`` TraceEvent absorbed by the core), and a sustained idle tail
+    after the drain retires the added device (``retire`` TraceEvent)."""
+    cfg, params = _make("granite-3-8b")
+    eng = ContinuousEngine(cfg, params, max_batch=2, max_seq=32)
+    ex = ThreadExecutor(build_comm=False, tick=0.01)
+    sess = SchedulerSession(ex, ResourceManager(["d0", "d1"]), tick=0.01)
+    grown = []
+
+    def grow():
+        h = f"g{len(grown)}"
+        grown.append(h)
+        ex.inject_grow([h])
+
+    asc = ServeAutoscaler(grow, lambda: ex.inject_retire([grown.pop()]),
+                          AutoscaleConfig(queue_high=2, idle_frac=0.6,
+                                          sustain_s=0.005, cooldown_s=0.01,
+                                          min_workers=1, max_workers=2),
+                          workers=1)
+    driver = ServeDriver(eng, sess, autoscaler=asc, telemetry_interval=0.0)
+    out = driver.run(_reqs(cfg, [(3, 8)] * 8), timeout=300)
+    assert len(out) == 8
+    assert any(kind == "grow" for _, kind in asc.actions)
+    # idle tail: the queue stays empty and the slots stay free, so the
+    # policy (observed here directly, as a router's idle loop would) fires
+    # the retire once the condition sustains past the cooldown
+    deadline = time.time() + 10
+    while not any(kind == "retire" for _, kind in asc.actions):
+        assert time.time() < deadline, "retire never fired"
+        asc.observe(0, 0, eng.max_batch)
+        time.sleep(0.002)
+    # one more scheduler step absorbs the queued retire event
+    sess.submit([TaskDescription(name="post", ranks=1, fn=lambda c: 0,
+                                 tags={"pipeline": "etl"})])
+    rep = sess.drain(timeout=60).close()
+    kinds = {e.kind for e in rep.trace}
+    assert "grow" in kinds and "retire" in kinds
+    assert sess.rm.total == 2          # grew to 3, retired back to 2
