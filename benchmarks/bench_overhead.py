@@ -637,6 +637,127 @@ def serve_compare(n_requests: int = 64, mean_gap_s: float = 0.0005):
     return out
 
 
+def _ckpt_steps(comm, n_steps=8, step_s=0.25):
+    """N sleep-per-step "training" steps, each durably checkpointed; resumes
+    from ``comm.checkpoint`` when the runtime bound one (REPRO_CKPT_DIR)."""
+    import time as _t
+
+    import numpy as np
+
+    ck = getattr(comm, "checkpoint", None)
+    state = {"acc": np.zeros(4)}
+    start = 0
+    if ck is not None:
+        last = ck.latest()
+        if last is not None:
+            state = ck.restore(last, like=state)
+            start = last + 1
+    executed = 0
+    for step in range(start, n_steps):
+        _t.sleep(step_s)
+        state = {"acc": state["acc"] + 1.0}
+        if ck is not None:
+            ck.save(step, state)
+        executed += 1
+    return {"executed": executed, "start": start,
+            "acc": [float(x) for x in state["acc"]]}
+
+
+def _cache_sleep(comm, dur=0.2, tag=0):
+    import time as _t
+    _t.sleep(dur)
+    return tag * 2
+
+
+def ckpt_resume_compare(n_steps: int = 8, step_s: float = 0.25):
+    """Crash-safe resume A/B (the PR 10 tentpole claim): a ProcessExecutor
+    task is SIGKILLed mid-run after several durably checkpointed steps; the
+    retry either resumes from the last completed step (session ckpt_root
+    set) or re-runs from scratch.  Reported per mode: steps the recovery
+    attempt re-executed, resumed_from_step evidence from the trace, and
+    wall.  A result-cache section runs the same task list twice through one
+    cache dir and reports the second run's cache_hits.  Everything lands in
+    ``benchmarks/artifacts/ckpt_summary.json``."""
+    import signal
+    import tempfile
+    import time as _t
+
+    from repro.core import (ProcessExecutor, ResourceManager,
+                            SchedulerSession, ThreadExecutor)
+
+    def run_once(ckpt_root):
+        with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                             build_comm=False, tick=0.005,
+                             heartbeat_interval=0.2,
+                             extra_pythonpath=[str(ROOT)]) as ex:
+            sess = SchedulerSession(ex, ex.resource_manager(), tick=0.005,
+                                    ckpt_root=ckpt_root)
+            t0 = _t.perf_counter()
+            (task,) = sess.submit([TaskDescription(
+                name="steps", ranks=1, fn=_ckpt_steps,
+                kwargs={"n_steps": n_steps, "step_s": step_s},
+                tags={"pipeline": "bench"})])
+            # let roughly half the steps commit durably, then kill the
+            # hosting worker mid-task
+            _t.sleep(step_s * (n_steps // 2) + 0.5)
+            ex.kill_worker(task.devices[0].worker, signal.SIGKILL)
+            rep = sess.drain(timeout=180).close()
+            wall = _t.perf_counter() - t0
+        steps = next(t for t in rep.tasks if t.desc.name == "steps")
+        assert steps.state.value == "DONE", steps.error
+        res = steps.result
+        ts = trace_summary(rep)
+        return {"wall_s": wall, "reexecuted_steps": res["executed"],
+                "resumed_from_step": steps.resumed_from_step,
+                "n_resume": ts["n_resume"], "n_retry": ts["n_retry"],
+                "final_acc": res["acc"][0]}
+
+    with tempfile.TemporaryDirectory() as root:
+        with_resume = run_once(os.path.join(root, "ckpt"))
+    without_resume = run_once(None)
+    for mode, row in (("with_resume", with_resume),
+                      ("without_resume", without_resume)):
+        emit(f"ckpt/{mode}/reexecuted_steps", row["reexecuted_steps"] * 1e6,
+             f"wall_s={row['wall_s']:.2f};"
+             f"resumed_from_step={row['resumed_from_step']}")
+
+    # result cache: the same task list twice through one cache dir — the
+    # second run completes from disk without dispatching
+    with tempfile.TemporaryDirectory() as cache:
+        def cache_run():
+            sess = SchedulerSession(
+                ThreadExecutor(build_comm=False, tick=0.005),
+                ResourceManager(["d0", "d1"]), tick=0.005,
+                result_cache=cache)
+            t0 = _t.perf_counter()
+            rep = sess.run([TaskDescription(
+                name=f"c{i}", ranks=1, fn=_cache_sleep,
+                kwargs={"dur": 0.2, "tag": i},
+                tags={"pipeline": "bench"}) for i in range(3)], timeout=60)
+            return trace_summary(rep), _t.perf_counter() - t0
+        cold, cold_wall = cache_run()
+        warm, warm_wall = cache_run()
+    emit("ckpt/cache/second_run_hits", warm["cache_hits"] * 1e6,
+         f"cold_wall_s={cold_wall:.2f};warm_wall_s={warm_wall:.2f}")
+
+    out = {"n_steps": n_steps, "step_s": step_s,
+           "with_resume": with_resume, "without_resume": without_resume,
+           "cache": {"cold_wall_s": cold_wall, "warm_wall_s": warm_wall,
+                     "cold_hits": cold["cache_hits"],
+                     "warm_hits": warm["cache_hits"]},
+           "acceptance": {
+               "resumed_from_step_positive":
+                   with_resume["resumed_from_step"] > 0,
+               "fewer_reexecuted_steps":
+                   with_resume["reexecuted_steps"]
+                   < without_resume["reexecuted_steps"],
+               "warm_run_all_hits": warm["cache_hits"] == 3}}
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "ckpt_summary.json").write_text(json.dumps(out, indent=2))
+    assert all(out["acceptance"].values()), out["acceptance"]
+    return out
+
+
 def run():
     res = {}
     if os.environ.get("BENCH_REAL", "1") == "1":
@@ -680,6 +801,10 @@ def run():
         # opt-in: continuous batching vs static batch on the same Poisson
         # request stream (req/s + latency percentiles)
         res["serve"] = serve_compare()
+    if os.environ.get("BENCH_CKPT", "0") == "1" or "--ckpt" in sys.argv:
+        # opt-in: checkpoint-resume A/B under a mid-task SIGKILL, plus the
+        # result cache's repeated-run hit rate
+        res["ckpt"] = ckpt_resume_compare()
     return res
 
 

@@ -83,6 +83,14 @@ def trace_summary(report) -> dict:
         "shm_bytes": sum(getattr(t, "shm_bytes", 0) for t in report.tasks),
         "ring_steps": sum(getattr(t, "ring_steps", 0)
                           for t in report.tasks),
+        # crash-safe resume + result-cache evidence (PR 10): attempts that
+        # restored a checkpoint instead of re-running from scratch, the
+        # steps they skipped, and tasks completed straight from the
+        # result cache — zeros on runs without REPRO_CKPT_DIR/RESULT_CACHE
+        "n_resume": kinds.get("resume", 0),
+        "resumed_steps": sum(getattr(t, "resumed_from_step", 0)
+                             for t in report.tasks),
+        "cache_hits": kinds.get("cache_hit", 0),
     }
     # span-derived timing breakdown, present only when worker flight-recorder
     # spans exist (process executor with instrumented workers, or a loaded

@@ -34,6 +34,9 @@ class Communicator:
     raw_coll_bytes: int = 0       # bytes shipped with zero-copy framing
     shm_bytes: int = 0            # bytes moved through shm segments
     ring_steps: int = 0           # ring-allgather forwards performed
+    checkpoint: Any = None        # CheckpointContext the runtime bound for
+    # this attempt (None when checkpointing is off) — payloads call
+    # comm.checkpoint.save/latest/restore to survive retries
 
     @property
     def size(self) -> int:

@@ -43,6 +43,9 @@ class ExecEvent:
     shm_bytes: int = 0             # payload bytes handed to same-host peers
     # through shared-memory segments (a subset of p2p_bytes)
     ring_steps: int = 0            # ring-allgather block forwards performed
+    resumed_from_step: int = 0     # checkpoint step the attempt restored
+    # before running (crash-safe resume evidence; 0 = ran from scratch,
+    # max over a multi-part proc task's workers)
     spans: list = dataclasses.field(default_factory=list)   # worker-side
     # flight-recorder spans of a terminal event, already aligned into the
     # parent clock: [{kind, t0, t1, worker, part, uid, task}, ...]; empty

@@ -147,6 +147,8 @@ class _Tracker:
         self.shm_bytes = 0                        # with zero-copy framing /
         self.ring_steps = 0                       # through shm segments /
         # ring forwards performed — the transport-tier evidence per task
+        self.resumed_from_step = 0                # max over parts: checkpoint
+        # step a part restored before running (crash-safe resume evidence)
         self.spans: list = []                     # worker flight-recorder
         # spans, aligned into the parent clock — piggybacked per PART_DONE
 
@@ -675,7 +677,9 @@ class ProcessExecutor(QueueEventExecutor):
                     peer_addrs=peer_addrs,
                     p2p_threshold=self.p2p_threshold,
                     raw_frames=self.raw_frames,
-                    ring=self.ring, shm=self.shm)
+                    ring=self.ring, shm=self.shm,
+                    ckpt_dir=task.ckpt_dir,
+                    ckpt_attempt=task.ckpt_attempt)
             except ConnectionClosed:
                 # this part (and the never-launched rest) can't run; parts
                 # already launched on other workers complete the tracker
@@ -768,7 +772,8 @@ class ProcessExecutor(QueueEventExecutor):
                        comm_s: float = 0.0, p2p_bytes: int = 0,
                        hub_calls: int = 0, spills: int = 0,
                        p2p_fallbacks: int = 0, raw_coll_bytes: int = 0,
-                       shm_bytes: int = 0, ring_steps: int = 0, spans=()):
+                       shm_bytes: int = 0, ring_steps: int = 0,
+                       resumed_from_step: int = 0, spans=()):
         """Record one part's fate; the task's single terminal ExecEvent is
         delivered only when EVERY part is accounted for (result, error, or
         hosted on a dead worker)."""
@@ -785,6 +790,8 @@ class ProcessExecutor(QueueEventExecutor):
             tracker.raw_coll_bytes += raw_coll_bytes
             tracker.shm_bytes += shm_bytes
             tracker.ring_steps += ring_steps
+            tracker.resumed_from_step = max(tracker.resumed_from_step,
+                                            resumed_from_step)
             tracker.spans.extend(spans)
             self.p2p_bytes += p2p_bytes
             self.spills += spills
@@ -817,6 +824,7 @@ class ProcessExecutor(QueueEventExecutor):
                                   raw_coll_bytes=tracker.raw_coll_bytes,
                                   shm_bytes=tracker.shm_bytes,
                                   ring_steps=tracker.ring_steps,
+                                  resumed_from_step=tracker.resumed_from_step,
                                   spans=list(tracker.spans)))
         else:
             # results stay as bytes until poll(): deserializing a large
@@ -833,6 +841,7 @@ class ProcessExecutor(QueueEventExecutor):
                                   raw_coll_bytes=tracker.raw_coll_bytes,
                                   shm_bytes=tracker.shm_bytes,
                                   ring_steps=tracker.ring_steps,
+                                  resumed_from_step=tracker.resumed_from_step,
                                   spans=list(tracker.spans)))
 
     def _fail_all_parts(self, tracker: _Tracker, error: str):
@@ -855,6 +864,7 @@ class ProcessExecutor(QueueEventExecutor):
                             raw_coll_bytes=d.get("raw_coll_bytes", 0),
                             shm_bytes=d.get("shm_bytes", 0),
                             ring_steps=d.get("ring_steps", 0),
+                            resumed_from_step=d.get("resumed_from_step", 0),
                             spans=_spans.align(
                                 d.get("spans") or (), wh.clock_offset,
                                 worker=wh.wid, part=d["part"], uid=d["uid"],

@@ -46,6 +46,13 @@ class SimOptions:
     work_stealing: bool = False          # BATCH: lease idle partition devices
     devices_per_node: int = 0            # synthetic topology: devices per
     # simulated node (0 -> the whole pool is one node, topology-blind)
+    ckpt_period_s: float = 0.0           # model payloads checkpointing every
+    # N virtual seconds: a failed attempt banks its durable progress
+    # (floored to whole periods) and the retry runs only the remainder,
+    # reporting resumed_from_step — the sim analogue of CheckpointContext.
+    # Takes effect only for tasks launched with a checkpoint namespace
+    # (session ckpt_root/REPRO_CKPT_DIR), mirroring the live backends.
+    # 0 -> retries re-run from scratch (the historical behaviour)
 
 
 class VirtualClockExecutor(Executor):
@@ -66,6 +73,8 @@ class VirtualClockExecutor(Executor):
         self._seq = itertools.count()
         self._heap: list = []
         self._canceled: set = set()
+        self._ckpt_progress: dict = {}   # primary uid -> durable virtual
+        # seconds banked by failed attempts (ckpt_period_s resume model)
         for ft, nf in self.opts.device_failures:
             heapq.heappush(self._heap,
                            (ft, next(self._seq),
@@ -96,9 +105,25 @@ class VirtualClockExecutor(Executor):
                 dur *= opts.straggler_slowdown
             fails = bool(opts.failure_prob
                          and self.rng.random() < opts.failure_prob)
+        resumed = 0
+        period = opts.ckpt_period_s
+        if period > 0 and task.ckpt_dir and duration_hint is None:
+            # resume model: this attempt restores whatever whole-period
+            # progress earlier attempts durably banked, and runs only the
+            # remainder.  A spec twin (duration_hint) models a fresh device
+            # at the hinted rate and is left alone.
+            banked = self._ckpt_progress.get(task.uid, 0.0)
+            resumed = int(banked // period)
+            dur = max(dur - resumed * period, 0.0)
+            if fails:
+                # what THIS attempt will have durably saved when it dies
+                self._ckpt_progress[task.uid] = \
+                    resumed * period + (dur // period) * period
+            else:
+                self._ckpt_progress.pop(task.uid, None)
         ev = ExecEvent("fail" if fails else "done", task=task,
                        error="injected failure" if fails else None,
-                       comm_build_s=oh)
+                       comm_build_s=oh, resumed_from_step=resumed)
         heapq.heappush(self._heap,
                        (self._now + oh + dur, next(self._seq), ev))
 

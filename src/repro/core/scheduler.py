@@ -25,8 +25,17 @@ The session is persistent: tasks may be submitted while others run
 (continuous DAG release, see ``core/pipeline.py``), and every lifecycle step
 is appended to a per-task event trace (``TraceEvent``: submit / dispatch /
 comm_build / done / fail / retry / speculate / cancel / device_failure /
-steal / return / grow / retire) consumed uniformly by the benchmarks and
-``SimReport``.
+steal / return / grow / retire / resume / cache_hit) consumed uniformly by
+the benchmarks and ``SimReport``.
+
+Long-running work survives churn cheaply: with ``ckpt_root`` (or
+``REPRO_CKPT_DIR``) set, every launched attempt carries a checkpoint
+namespace shared across the logical task's lineage, so retries and
+spec-exec twins resume from the last durably completed step
+(``resume`` trace event, ``resumed_from_step`` evidence); with
+``result_cache`` (or ``REPRO_RESULT_CACHE``) naming a directory, a
+resubmitted identical task completes straight from the stored result
+(``cache_hit``) without dispatching.
 
 The pool is elastic at runtime in BOTH directions on every backend: a
 ``grow`` event (``ProcessExecutor.add_worker``, ``inject_grow`` on live
@@ -49,10 +58,15 @@ them back on release (``return``).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
 import statistics
 import threading
 import time as _time
+from pathlib import Path
 from typing import Optional, Sequence
+
+from repro.core.executors import serialize as _serialize
 
 from repro.core.executors import (
     ExecEvent, Executor, ProcDevice, ProcessExecutor, SimOptions, StubComm,
@@ -107,7 +121,7 @@ def interleave_by_pipeline(tasks):
 TRACE_EVENT_KINDS = frozenset({
     "submit", "dispatch", "comm_build", "done", "fail", "retry", "speculate",
     "cancel", "device_failure", "steal", "return", "grow", "retire",
-    "telemetry",
+    "telemetry", "resume", "cache_hit",
 })
 
 
@@ -116,7 +130,7 @@ class TraceEvent:
     t: float          # executor clock (virtual seconds or perf_counter)
     kind: str         # submit|dispatch|comm_build|done|fail|retry|speculate|
                       # cancel|device_failure|steal|return|grow|retire|
-                      # telemetry
+                      # telemetry|resume|cache_hit
     task: str = ""    # task name ("" for pool-level events)
     uid: int = -1
     pipeline: str = ""
@@ -124,7 +138,8 @@ class TraceEvent:
     value: float = 0.0   # kind-specific payload (comm_build: seconds;
                          # device_failure: #devices lost; steal/return:
                          # #devices leased across partitions / handed back;
-                         # grow/retire: #devices joining/leaving the pool)
+                         # grow/retire: #devices joining/leaving the pool;
+                         # resume: checkpoint step the attempt restored)
     p2p: float = 0.0     # comm-stats evidence on terminal done/fail events:
                          # bytes the task's collectives moved worker-to-
                          # worker.  The process executor reports real bytes;
@@ -188,7 +203,9 @@ class SchedulerSession:
                  speculative_factor: Optional[float] = None,
                  tick: float = 0.05, placement: str = SPREAD,
                  work_stealing: bool = False,
-                 trace_path: Optional[str] = None):
+                 trace_path: Optional[str] = None,
+                 ckpt_root: Optional[str] = None,
+                 result_cache: Optional[str] = None):
         if placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {placement!r}; expected "
                              f"one of {PLACEMENTS}")
@@ -233,6 +250,21 @@ class SchedulerSession:
         # work-stealing bookkeeping so released devices return to the
         # partition they were leased from, never the thief's own pool
         self._max_timeout = 0.0   # largest wait budget seen; sizes the reaper
+        # crash-safe resume: every attempt of one logical task checkpoints
+        # under <ckpt_root>/t<primary_uid>, so retries and spec-exec twins
+        # restore the doomed attempt's last durable step (REPRO_CKPT_DIR)
+        if ckpt_root is None:
+            ckpt_root = os.environ.get("REPRO_CKPT_DIR", "")
+        self.ckpt_root = ckpt_root or None
+        # result memoization keyed on (fn, args, kwargs, ranks) digests:
+        # a repeated identical DAG run completes finished stages straight
+        # from disk with a cache_hit event (REPRO_RESULT_CACHE=<dir>, "0"
+        # or empty disables; live executors only — sim results are fake)
+        if result_cache is None:
+            result_cache = os.environ.get("REPRO_RESULT_CACHE", "")
+        self.result_cache = None if result_cache in ("", "0") else result_cache
+        self._cache_done: list[Task] = []   # cache-completed tasks awaiting
+        # delivery through wait_any, so drain()/run_pipelines see them
 
     # -- trace ------------------------------------------------------------
     def _tr(self, kind: str, task: Optional[Task] = None, t: Optional[float] = None,
@@ -310,7 +342,9 @@ class SchedulerSession:
             t.submit_time = now
             self._tr("submit", t, t=now)
         self.tasks.extend(tasks)
-        self.pending.extend(tasks)
+        for t in tasks:
+            if not self._cache_load(t):
+                self.pending.append(t)
         self._dispatch()
         return tasks
 
@@ -319,7 +353,7 @@ class SchedulerSession:
         """Tasks still owed a terminal state.  Spec-exec losers do not
         count: their live threads may linger, but the workload result no
         longer depends on them."""
-        return len(self.pending) + sum(
+        return len(self.pending) + len(self._cache_done) + sum(
             1 for uid in self.running if uid not in self._ignored)
 
     def wait_any(self, timeout: Optional[float] = None) -> list[Task]:
@@ -327,6 +361,10 @@ class SchedulerSession:
         An empty list means stuck (nothing running and pending tasks cannot
         dispatch) or timeout."""
         finished: list[Task] = []
+        if self._cache_done:
+            # cache-completed tasks never touch the executor; deliver them
+            # like any other completion so DAG drivers release dependents
+            finished, self._cache_done = self._cache_done, []
         enforce = timeout is not None and self.executor.wall_clock
         if enforce:
             self._max_timeout = max(self._max_timeout, timeout)
@@ -473,6 +511,82 @@ class SchedulerSession:
         if self._writer is not None:
             self._writer.telemetry(rec)
 
+    # -- checkpoint + result cache ----------------------------------------
+    def _bind_ckpt(self, task: Task):
+        """Stamp the attempt's checkpoint namespace before launch.  Every
+        attempt of one logical task — primary retries ``a0, a1, ...`` and
+        spec-exec twins ``s<uid>`` — shares ``<ckpt_root>/t<primary_uid>``,
+        so a relaunch reads the doomed attempt's durable steps while writing
+        only into its own attempt dir (see ``train.checkpoint``)."""
+        if not self.ckpt_root:
+            task.ckpt_dir = ""
+            task.ckpt_attempt = ""
+            return
+        primary_uid = task.speculative_of \
+            if task.speculative_of is not None else task.uid
+        task.ckpt_dir = os.path.join(self.ckpt_root, f"t{primary_uid}")
+        task.ckpt_attempt = (f"s{task.uid}" if task.speculative_of is not None
+                             else f"a{task.retries}")
+
+    def _cache_key(self, desc: TaskDescription) -> str:
+        """Digest of (fn, args, kwargs, ranks) — "" when uncacheable (no fn,
+        or the payload does not serialize deterministically)."""
+        if desc.fn is None:
+            return ""
+        try:
+            h = hashlib.sha256()
+            h.update(_serialize.dumps((desc.fn, desc.args, desc.kwargs)))
+            h.update(str(desc.ranks).encode())
+            return h.hexdigest()
+        except Exception:
+            return ""
+
+    def _cache_load(self, task: Task) -> bool:
+        """Try to complete ``task`` straight from the result cache.  On a
+        hit the task never dispatches: it goes DONE with the deserialized
+        (bit-identical) stored result, emits ``cache_hit``, and is delivered
+        through the next ``wait_any`` like any other completion."""
+        if not (self.result_cache and self.executor.wall_clock):
+            return False
+        task.cache_key = self._cache_key(task.desc)
+        if not task.cache_key:
+            return False
+        try:
+            blob = (Path(self.result_cache)
+                    / f"{task.cache_key}.pkl").read_bytes()
+            result = _serialize.loads(blob)
+        except Exception:
+            return False   # miss, or a torn/unreadable entry: recompute
+        now = self.executor.now()
+        task.state = TaskState.DONE
+        task.result = result
+        task.cache_hit = True
+        task.start_time = now
+        task.end_time = now
+        self._finished_uids.add(task.uid)
+        self._tr("cache_hit", task, t=now)
+        self._tr("done", task, t=now, data={"cache_hit": True})
+        self._cache_done.append(task)
+        return True
+
+    def _cache_store(self, task: Task):
+        """Persist a DONE task's result (tmp + os.replace, so concurrent
+        sessions sharing a cache dir never observe a torn entry)."""
+        if not (self.result_cache and task.cache_key) or task.cache_hit:
+            return
+        try:
+            blob = _serialize.dumps(task.result)
+        except Exception:
+            return   # unserializable result: simply not cacheable
+        try:
+            root = Path(self.result_cache)
+            root.mkdir(parents=True, exist_ok=True)
+            tmp = root / f".{task.cache_key}.tmp.{os.getpid()}"
+            tmp.write_bytes(blob)
+            os.replace(tmp, root / f"{task.cache_key}.pkl")
+        except OSError:
+            return
+
     # -- internals --------------------------------------------------------
     def _allocate(self, pool: ResourceManager, n: int, exclude) -> tuple:
         """All scheduler allocations flow through the placement layer: the
@@ -570,6 +684,7 @@ class SchedulerSession:
                 task.placement = self.placement
                 task.start_time = self.executor.now()
                 self.running[task.uid] = task
+                self._bind_ckpt(task)
                 self._tr("dispatch", task)
                 self.executor.launch(task)
                 progressed = True
@@ -605,6 +720,7 @@ class SchedulerSession:
                     dup.devices = self._allocate(pool, task.desc.ranks,
                                                  set(task.devices))
                     self.running[dup.uid] = dup
+                    self._bind_ckpt(dup)
                     self._tr("speculate", dup)
                     self.executor.launch(dup, duration_hint=med)
                     self.n_speculative += 1
@@ -732,6 +848,7 @@ class SchedulerSession:
         task.raw_coll_bytes = ev.raw_coll_bytes
         task.shm_bytes = ev.shm_bytes
         task.ring_steps = ev.ring_steps
+        task.resumed_from_step = ev.resumed_from_step
         # worker flight-recorder spans arrive piggybacked on the terminal
         # event, already aligned into this executor's clock
         self._record_spans(ev.spans)
@@ -740,7 +857,8 @@ class SchedulerSession:
                  "hub_relay_bytes": ev.hub_relay_bytes,
                  "raw_coll_bytes": ev.raw_coll_bytes,
                  "shm_bytes": ev.shm_bytes,
-                 "ring_steps": ev.ring_steps}
+                 "ring_steps": ev.ring_steps,
+                 "resumed_from_step": ev.resumed_from_step}
         if task.uid in self._ignored:
             self._ignored.discard(task.uid)
             self._dispatch()   # live twin finished after cancel: reclaim only
@@ -750,6 +868,10 @@ class SchedulerSession:
             self.overhead_total += ev.comm_build_s
             self._tr("comm_build", task, t=task.start_time + ev.comm_build_s,
                      value=ev.comm_build_s)
+        if ev.resumed_from_step:
+            # crash-safe resume evidence: this attempt restored the lineage's
+            # durable step N instead of re-running from scratch
+            self._tr("resume", task, value=float(ev.resumed_from_step))
 
         primary_uid = task.speculative_of if task.speculative_of is not None \
             else task.uid
@@ -804,8 +926,10 @@ class SchedulerSession:
         target.raw_coll_bytes = ev.raw_coll_bytes
         target.shm_bytes = ev.shm_bytes
         target.ring_steps = ev.ring_steps
+        target.resumed_from_step = ev.resumed_from_step
         self._done_durations.setdefault(target.desc.name, []).append(
             now - target.start_time)
+        self._cache_store(target)
         self._tr("done", target, p2p=float(ev.p2p_bytes),
                  spills=float(ev.spills), data=stats)
         self._maybe_speculate()

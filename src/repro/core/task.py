@@ -74,6 +74,16 @@ class Task:
     shm_bytes: int = 0               # payload bytes moved through same-host
     # shared-memory segments (a subset of p2p_bytes)
     ring_steps: int = 0              # ring-allgather block forwards paid
+    ckpt_dir: str = ""               # task-lineage checkpoint dir under the
+    # session ckpt root ("" = checkpointing off; set by the scheduler)
+    ckpt_attempt: str = ""           # attempt namespace inside ckpt_dir
+    # (a<retries> for primaries, s<uid> for speculative twins)
+    resumed_from_step: int = 0       # last checkpoint step this attempt
+    # restored before running (0 = ran from scratch)
+    cache_hit: bool = False          # completed from the result cache
+    # without dispatching (REPRO_RESULT_CACHE)
+    cache_key: str = ""              # result-cache digest of (fn, args,
+    # kwargs, ranks); "" when the payload is uncacheable
 
     @property
     def run_seconds(self) -> float:

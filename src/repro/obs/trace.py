@@ -102,6 +102,7 @@ class _TaskStub:
     raw_coll_bytes: int = 0
     shm_bytes: int = 0
     ring_steps: int = 0
+    resumed_from_step: int = 0
 
 
 @dataclasses.dataclass
@@ -206,7 +207,8 @@ def load_trace(path: str) -> RecordedTrace:
                         hub_relay_bytes=int(d.get("hub_relay_bytes", 0)),
                         raw_coll_bytes=int(d.get("raw_coll_bytes", 0)),
                         shm_bytes=int(d.get("shm_bytes", 0)),
-                        ring_steps=int(d.get("ring_steps", 0)))
+                        ring_steps=int(d.get("ring_steps", 0)),
+                        resumed_from_step=int(d.get("resumed_from_step", 0)))
             elif typ == "span":
                 spans.append(obj)
             elif typ == "telemetry":

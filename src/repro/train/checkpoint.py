@@ -8,19 +8,47 @@ Saves run on a background thread (training continues).  Restore takes a
 target mesh + specs and ``jax.device_put``s each leaf with its NamedSharding —
 so a checkpoint written on one mesh restores onto ANY mesh shape (elastic
 re-shard at load), which is the recovery path after pool shrink/grow.
+
+Crash-safety contract: a step EXISTS iff its ``manifest.json`` landed
+complete — leaf files are written first, then the manifest commits the step
+via tmp-file + ``os.replace``, and only then does ``LATEST`` advance (also
+atomically, and only forward).  A process killed mid-save therefore leaves
+either a fully restorable step or an ignorable partial dir; ``latest_step``
+validates what ``LATEST`` points at and falls back to the newest step whose
+manifest is complete, so a torn tail never wedges resume.
+
+``CheckpointContext`` is the task-level face of this module: the runtime
+binds one per ``(task lineage, attempt, part)`` and hands it to payloads as
+``comm.checkpoint`` — each attempt writes only into its own directory, but
+``latest()``/``restore()`` read across sibling attempts, so a retry or a
+speculative twin resumes from whatever step the doomed primary durably
+completed.
 """
 from __future__ import annotations
 
 import json
+import os
 import threading
 from pathlib import Path
 
-import jax
 import numpy as np
-from jax.sharding import NamedSharding
+
+# jax is imported lazily inside functions — importing this module (e.g. in a
+# pilot worker building a CheckpointContext) stays cheap on its own.
+
+STEP_FMT = "step_{:08d}"
+
+# serializes LATEST read-modify-write within a process; cross-process safety
+# comes from the runtime binding one writer (uid, attempt, part) per dir
+_latest_lock = threading.Lock()
+
+
+class CheckpointError(RuntimeError):
+    """Structured checkpoint failure (missing leaf, no restorable step...)."""
 
 
 def _flatten(tree):
+    import jax
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in leaves:
@@ -29,12 +57,99 @@ def _flatten(tree):
     return out, jax.tree.structure(tree)
 
 
+# Plain trees — dict/list/tuple containers over numpy/scalar leaves — are
+# handled without jax at all, producing the SAME leaf keys as the jax
+# flatten (path parts joined by "/"), so the two paths read each other's
+# checkpoints and a task checkpointing plain numpy state never touches the
+# JAX tree machinery on its hot save path.
+
+def _is_plain(tree) -> bool:
+    if isinstance(tree, dict):
+        return all(_is_plain(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return all(_is_plain(v) for v in tree)
+    return isinstance(tree, (np.ndarray, np.generic, bool, int, float,
+                             complex))
+
+
+def _flatten_plain(tree, path=(), out=None) -> dict:
+    out = {} if out is None else out
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            _flatten_plain(v, path + (str(k),), out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten_plain(v, path + (str(i),), out)
+    else:
+        out["/".join(path)] = tree
+    return out
+
+
+def _rebuild_plain(like, loaded: dict, ctx: str, path=()):
+    if isinstance(like, dict):
+        return {k: _rebuild_plain(v, loaded, ctx, path + (str(k),))
+                for k, v in like.items()}
+    if isinstance(like, (list, tuple)):
+        vals = [_rebuild_plain(v, loaded, ctx, path + (str(i),))
+                for i, v in enumerate(like)]
+        if hasattr(like, "_fields"):          # namedtuple
+            return type(like)(*vals)
+        return type(like)(vals)
+    key = "/".join(path)
+    if key not in loaded:
+        raise CheckpointError(
+            f"{ctx} has no leaf {key!r} required by `like`; "
+            f"checkpoint holds {sorted(loaded)}")
+    return loaded[key]
+
+
+def _atomic_write_text(path: Path, text: str) -> None:
+    tmp = path.with_name(f".{path.name}.tmp.{os.getpid()}.{threading.get_ident()}")
+    tmp.write_text(text)
+    os.replace(tmp, path)
+
+
+def _advance_latest(root: Path, step: int) -> None:
+    with _latest_lock:
+        cur = _read_latest(root)
+        if cur is None or step > cur:
+            _atomic_write_text(root / "LATEST", str(step))
+
+
+def _read_latest(root: Path) -> int | None:
+    try:
+        return int((root / "LATEST").read_text().strip())
+    except (OSError, ValueError):
+        return None  # absent or torn — caller falls back to manifest scan
+
+
+def _manifest_ok(d: Path, step: int | None = None) -> dict | None:
+    """The step's manifest, or None unless it parses, matches ``step``, and
+    every leaf file it names is present (= the step committed completely)."""
+    try:
+        m = json.loads((d / "manifest.json").read_text())
+    except (OSError, ValueError):
+        return None
+    if not isinstance(m, dict) or not isinstance(m.get("leaves"), dict):
+        return None
+    if step is not None and m.get("step") != step:
+        return None
+    for meta in m["leaves"].values():
+        if not (d / meta["file"]).exists():
+            return None
+    return m
+
+
 def save(ckpt_dir, step: int, tree, *, async_: bool = True):
     """Write the pytree; returns a join()-able handle."""
-    d = Path(ckpt_dir) / f"step_{step:08d}"
+    d = Path(ckpt_dir) / STEP_FMT.format(step)
     d.mkdir(parents=True, exist_ok=True)
-    flat, _ = _flatten(tree)
-    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    if _is_plain(tree):
+        host = {k: np.asarray(v) for k, v in _flatten_plain(tree).items()}
+    else:
+        import jax
+        flat, _ = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
 
     def _write():
         manifest = {"step": step, "leaves": {}}
@@ -43,8 +158,9 @@ def save(ckpt_dir, step: int, tree, *, async_: bool = True):
             np.save(d / fname, v)
             manifest["leaves"][k] = {"file": fname, "shape": list(v.shape),
                                      "dtype": str(v.dtype)}
-        (d / "manifest.json").write_text(json.dumps(manifest))
-        (Path(ckpt_dir) / "LATEST").write_text(str(step))
+        # commit point: the step exists once the manifest lands whole
+        _atomic_write_text(d / "manifest.json", json.dumps(manifest))
+        _advance_latest(Path(ckpt_dir), step)
 
     if async_:
         t = threading.Thread(target=_write, daemon=True)
@@ -54,36 +170,137 @@ def save(ckpt_dir, step: int, tree, *, async_: bool = True):
     return None
 
 
+def completed_steps(ckpt_dir) -> list[int]:
+    """Ascending steps under ``ckpt_dir`` whose manifests are complete."""
+    root = Path(ckpt_dir)
+    steps = []
+    try:
+        entries = list(root.iterdir())
+    except OSError:
+        return []
+    for d in entries:
+        if not d.name.startswith("step_"):
+            continue
+        try:
+            s = int(d.name.split("_", 1)[1])
+        except ValueError:
+            continue
+        if _manifest_ok(d, s) is not None:
+            steps.append(s)
+    return sorted(steps)
+
+
 def latest_step(ckpt_dir) -> int | None:
-    f = Path(ckpt_dir) / "LATEST"
-    if not f.exists():
-        return None
-    return int(f.read_text().strip())
+    root = Path(ckpt_dir)
+    cur = _read_latest(root)
+    if cur is not None and _manifest_ok(root / STEP_FMT.format(cur), cur) is not None:
+        return cur
+    # LATEST absent/torn/pointing at an incomplete step: trust the manifests
+    steps = completed_steps(root)
+    return steps[-1] if steps else None
 
 
 def restore(ckpt_dir, step: int, like, *, mesh=None, specs=None):
     """Load into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  With mesh+specs, each leaf is device_put with its
     NamedSharding — restoring onto a different mesh re-shards transparently."""
-    d = Path(ckpt_dir) / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
-    flat_like, _ = _flatten(like)
-    flat_specs, _ = _flatten(specs) if specs is not None else ({}, None)
+    d = Path(ckpt_dir) / STEP_FMT.format(step)
+    manifest = _manifest_ok(d, step)
+    if manifest is None:
+        raise CheckpointError(
+            f"no complete checkpoint for step {step} under {ckpt_dir}")
+    plain = mesh is None and specs is None and _is_plain(like)
+    if plain:
+        flat_like, flat_specs = _flatten_plain(like), {}
+    else:
+        flat_like, _ = _flatten(like)
+        flat_specs, _ = _flatten(specs) if specs is not None else ({}, None)
 
     loaded = {}
     for k, meta in manifest["leaves"].items():
         arr = np.load(d / meta["file"])
-        want = flat_like.get(k)
-        if want is not None:
-            arr = arr.astype(want.dtype)
+        want_dt = getattr(flat_like.get(k), "dtype", None)
+        if want_dt is not None and arr.dtype != np.dtype(want_dt):
+            arr = arr.astype(want_dt)      # no-op dtypes skip the copy
         if mesh is not None and k in flat_specs:
+            import jax
+            from jax.sharding import NamedSharding
             arr = jax.device_put(arr, NamedSharding(mesh, flat_specs[k]))
         loaded[k] = arr
 
     # rebuild via the same key order as `like`
+    if plain:
+        return _rebuild_plain(like, loaded, f"step {step} at {d}")
+    import jax
     leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
     vals = []
     for path, leaf in leaves:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in loaded:
+            raise CheckpointError(
+                f"step {step} at {d} has no leaf {key!r} required by `like`; "
+                f"manifest holds {sorted(manifest['leaves'])}")
         vals.append(loaded[key])
     return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+class CheckpointContext:
+    """Task-level checkpoint handle, bound per ``(task lineage, attempt, part)``.
+
+    Directory layout under the session checkpoint root::
+
+        <root>/t<primary-uid>/p<part>-of-<n_parts>/<attempt>/step_<N>/...
+
+    ``save`` writes only into this attempt's own directory (no cross-attempt
+    write races — a doomed primary keeps appending steps while its retry is
+    already up).  ``latest``/``restore`` read the whole part scope: own
+    attempt first, then sibling attempts newest-step-first, which is how a
+    retry (attempt ``a1``) or a speculative twin (attempt ``s<uid>``) picks
+    up the primary ``a0``'s last durably completed step.  A task relaunched
+    with a different part split gets a different scope and conservatively
+    starts fresh.  ``resumed_from_step`` records the last step restored and
+    flows back through PART_DONE → ExecEvent → TraceEvent as resume evidence.
+    """
+
+    def __init__(self, task_dir, *, attempt: str = "a0",
+                 part: int = 0, n_parts: int = 1):
+        self.attempt = str(attempt) or "a0"
+        self.scope = Path(task_dir) / f"p{part}-of-{n_parts}"
+        self.dir = self.scope / self.attempt       # this attempt's write dir
+        self.resumed_from_step = 0
+
+    def _read_dirs(self) -> list[Path]:
+        try:
+            siblings = [d for d in self.scope.iterdir()
+                        if d.is_dir() and d != self.dir]
+        except OSError:
+            siblings = []
+        ranked = sorted(siblings,
+                        key=lambda d: latest_step(d) if latest_step(d) is not None
+                        else -1, reverse=True)
+        return [self.dir] + ranked
+
+    def save(self, step: int, tree, *, async_: bool = False):
+        """Durable by default: payloads report a step done only once it is
+        restorable (pass ``async_=True`` to overlap with compute)."""
+        return save(self.dir, step, tree, async_=async_)
+
+    def latest(self) -> int | None:
+        steps = [s for d in self._read_dirs()
+                 if (s := latest_step(d)) is not None]
+        return max(steps) if steps else None
+
+    def restore(self, step: int, like, *, mesh=None, specs=None):
+        last_err = None
+        for d in self._read_dirs():
+            if _manifest_ok(d / STEP_FMT.format(step), step) is None:
+                continue
+            try:
+                tree = restore(d, step, like, mesh=mesh, specs=specs)
+            except CheckpointError as e:
+                last_err = e
+                continue
+            self.resumed_from_step = max(self.resumed_from_step, step)
+            return tree
+        raise last_err or CheckpointError(
+            f"no attempt under {self.scope} holds a complete step {step}")

@@ -77,7 +77,7 @@ class Trainer:
         state = state or self.init_state()
         losses = []
         pending_save = None
-        t0 = time.time()
+        t0 = time.monotonic()  # rate measurement must not jump under NTP
         with self.mesh:
             for i, batch in enumerate(batches):
                 if i >= steps:
@@ -91,7 +91,7 @@ class Trainer:
                 if on_metrics:
                     on_metrics(state.step, {k: float(v) for k, v in metrics.items()})
                 if log_every and state.step % log_every == 0:
-                    rate = state.step / max(time.time() - t0, 1e-9)
+                    rate = state.step / max(time.monotonic() - t0, 1e-9)
                     print(f"step {state.step:5d}  loss {loss:.4f}  "
                           f"lr {float(metrics['lr']):.2e}  {rate:.2f} it/s",
                           flush=True)

@@ -1,0 +1,20 @@
+"""Importable result-cache payloads for test_checkpoint_resume.
+
+Kept OUT of the test module on purpose: the test module is registered with
+``cloudpickle.register_pickle_by_value`` (its proc payloads must ship to
+worker processes by value), and by-value pickling of a function is not
+byte-stable across intervening imports in one process — the result-cache
+key would drift.  An importable module-level function pickles by reference
+(module + qualname), so its digest is deterministic — which is also the
+realistic shape of cacheable production payloads.
+"""
+import numpy as np
+
+
+def counted(comm, marker, scale=2.0):
+    # execution counter lives in a side file, NOT a global the pickled
+    # payload could capture into its digest
+    with open(marker, "a") as f:
+        f.write("x\n")
+    rng = np.random.default_rng(7)
+    return (rng.standard_normal(16) * scale).astype(np.float32)

@@ -1,0 +1,396 @@
+"""Crash-safe checkpoint-resume and the task result cache (PR 10).
+
+Three layers, mirroring how the feature is built:
+
+* ``train.checkpoint`` commit protocol — atomic manifest/LATEST finalize,
+  torn-tail fallback, structured restore errors, and the
+  ``CheckpointContext`` attempt-lineage reads (unit, tier-1);
+* scheduler integration — a retry on the thread executor resumes from the
+  doomed attempt's last durable step, and identical resubmitted tasks
+  complete straight from the result cache, bit-identically (tier-1);
+* process-executor integration — a worker SIGKILLed mid-task loses real
+  state, yet the retry on the surviving worker restores the checkpoint
+  written before the kill (``integration`` mark, CI proc job).
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ProcessExecutor, ResourceManager, SchedulerSession, TaskDescription,
+    TaskState, ThreadExecutor,
+)
+from repro.core.executors import SimOptions, serialize
+from repro.core.scheduler import simulate
+from repro.train.checkpoint import (
+    CheckpointContext, CheckpointError, completed_steps, latest_step,
+    restore, save,
+)
+
+if serialize.HAVE_CLOUDPICKLE:
+    import cloudpickle
+
+    # ship this module's payload functions by value: a worker process has no
+    # way to import the test module
+    cloudpickle.register_pickle_by_value(sys.modules[__name__])
+
+needs_cloudpickle = pytest.mark.skipif(
+    not serialize.HAVE_CLOUDPICKLE,
+    reason="cloudpickle needed to ship test-local payload functions")
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+# ---------------------------------------------------------------------------
+# commit protocol units
+# ---------------------------------------------------------------------------
+def _tree(scale=1.0):
+    return {"w": np.arange(4.0) * scale, "opt": {"m": np.ones(2) * scale}}
+
+
+def test_save_commits_atomically_and_latest_is_monotonic(tmp_path):
+    save(tmp_path, 5, _tree(), async_=False)
+    # an out-of-order (older) save lands as a step but must NOT move LATEST
+    # backwards — e.g. a straggling async writer of a step already superseded
+    save(tmp_path, 3, _tree(0.5), async_=False)
+    assert (tmp_path / "LATEST").read_text().strip() == "5"
+    assert completed_steps(tmp_path) == [3, 5]
+    assert latest_step(tmp_path) == 5
+    # tmp-file finalize leaves no droppings behind
+    assert not [p for p in tmp_path.rglob(".*tmp*")]
+
+
+def test_latest_validates_and_falls_back_to_newest_complete(tmp_path):
+    save(tmp_path, 1, _tree(), async_=False)
+    save(tmp_path, 2, _tree(2.0), async_=False)
+    # torn LATEST (garbage bytes): fall back to the manifest scan
+    (tmp_path / "LATEST").write_text("garb\x00age")
+    assert latest_step(tmp_path) == 2
+    # LATEST pointing at a step whose leaf vanished: also fall back
+    (tmp_path / "LATEST").write_text("2")
+    (tmp_path / "step_00000002" / "w.npy").unlink()
+    assert latest_step(tmp_path) == 1
+    assert completed_steps(tmp_path) == [1]
+    # and restore of the half-missing step refuses with a structured error
+    with pytest.raises(CheckpointError, match="step 2"):
+        restore(tmp_path, 2, _tree())
+
+
+def test_restore_names_missing_leaf(tmp_path):
+    save(tmp_path, 0, {"w": np.arange(3.0)}, async_=False)
+    with pytest.raises(CheckpointError, match="opt/m"):
+        restore(tmp_path, 0, {"w": np.zeros(3), "opt": {"m": np.zeros(2)}})
+    with pytest.raises(CheckpointError, match="no complete checkpoint"):
+        restore(tmp_path, 9, {"w": np.zeros(3)})
+
+
+def test_restore_dtype_cast_and_scalar_leaves(tmp_path):
+    tree = {"w": np.arange(4, dtype=np.float64), "step": 7, "lr": 0.1}
+    save(tmp_path, 0, tree, async_=False)
+    like = {"w": np.zeros(4, dtype=np.float32), "step": 0, "lr": 0.0}
+    got = restore(tmp_path, 0, like)
+    assert got["w"].dtype == np.float32          # cast to `like`'s dtype
+    assert np.allclose(got["w"], np.arange(4))
+    assert int(got["step"]) == 7                 # scalar leaves: no dtype
+    assert float(got["lr"]) == pytest.approx(0.1)   # guard crash (satellite)
+    same = restore(tmp_path, 0, {"w": np.zeros(4, dtype=np.float64),
+                                 "step": 0, "lr": 0.0})
+    assert same["w"].dtype == np.float64
+
+
+def test_plain_save_restores_through_jax_tree_path(tmp_path):
+    import jax.numpy as jnp
+    save(tmp_path, 0, _tree(3.0), async_=False)     # pure-numpy writer
+    like = {"w": jnp.zeros(4, jnp.float32), "opt": {"m": jnp.zeros(2)}}
+    got = restore(tmp_path, 0, like)                # jax-flatten reader
+    assert got["w"].dtype == np.float32             # cast to like's dtype
+    assert np.allclose(np.asarray(got["w"]), np.arange(4.0) * 3.0)
+
+
+def test_sigkill_at_commit_boundary_leaves_restorable_step(tmp_path):
+    """A process killed after writing step 1's leaves but BEFORE its
+    manifest commits must leave step 0 fully restorable and step 1
+    invisible — the manifest is the commit point."""
+    snippet = (
+        "import os, signal, sys\n"
+        "import numpy as np\n"
+        "from repro.train import checkpoint as ck\n"
+        "root = sys.argv[1]\n"
+        "ck.save(root, 0, {'w': np.arange(4.0)}, async_=False)\n"
+        "orig = ck._atomic_write_text\n"
+        "def dying(path, text):\n"
+        "    if path.name == 'manifest.json':\n"
+        "        os.kill(os.getpid(), signal.SIGKILL)\n"
+        "    orig(path, text)\n"
+        "ck._atomic_write_text = dying\n"
+        "ck.save(root, 1, {'w': np.arange(4.0) * 2}, async_=False)\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", snippet, str(tmp_path)],
+                       env=env, capture_output=True, text=True, timeout=240)
+    assert r.returncode == -signal.SIGKILL, r.stderr
+    # the kill really happened mid-save: step 1's leaves are on disk...
+    assert (tmp_path / "step_00000001" / "w.npy").exists()
+    # ...but the step never committed, and resume lands on step 0
+    assert latest_step(tmp_path) == 0
+    assert completed_steps(tmp_path) == [0]
+    got = restore(tmp_path, 0, {"w": np.zeros(4)})
+    assert np.allclose(got["w"], np.arange(4.0))
+
+
+def test_context_reads_across_attempts_writes_only_its_own(tmp_path):
+    a0 = CheckpointContext(tmp_path, attempt="a0")
+    a0.save(0, {"acc": np.full(2, 0.0)})
+    a0.save(1, {"acc": np.full(2, 1.0)})
+    a1 = CheckpointContext(tmp_path, attempt="a1")
+    assert a1.latest() == 1                       # sees the doomed primary's
+    got = a1.restore(1, {"acc": np.zeros(2)})     # durable progress...
+    assert np.allclose(got["acc"], 1.0)
+    assert a1.resumed_from_step == 1
+    a1.save(2, {"acc": np.full(2, 2.0)})
+    # ...but writes land only in a1's own dir (no cross-attempt races)
+    assert completed_steps(a0.dir) == [0, 1]
+    assert completed_steps(a1.dir) == [2]
+    assert a0.latest() == 2                       # lineage-wide view
+    # a different part split is a different scope: conservatively fresh
+    assert CheckpointContext(tmp_path, attempt="a0",
+                             part=0, n_parts=2).latest() is None
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: thread executor (tier-1)
+# ---------------------------------------------------------------------------
+def test_thread_retry_resumes_from_last_durable_step(tmp_path):
+    executed = []
+
+    def pay(comm, n_steps=6):
+        c = comm.checkpoint
+        assert c is not None
+        acc, start = np.zeros(2), 0
+        last = c.latest()
+        if last is not None:
+            acc = c.restore(last, {"acc": acc})["acc"]
+            start = last + 1
+        for s in range(start, n_steps):
+            executed.append(s)
+            acc = acc + s
+            c.save(s, {"acc": acc})
+            if s == 2 and c.attempt == "a0":
+                raise RuntimeError("dies after step 2 committed")
+        return acc
+
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01),
+                            ResourceManager(["d0"]), tick=0.01,
+                            ckpt_root=str(tmp_path))
+    rep = sess.run([TaskDescription(name="t", ranks=1, fn=pay, max_retries=2,
+                                    tags={"pipeline": "p"})], timeout=60)
+    task = rep.tasks[0]
+    assert task.state == TaskState.DONE
+    assert rep.n_retries == 1
+    # the retry restored step 2 and ran 3..5 — no step executed twice
+    assert executed == [0, 1, 2, 3, 4, 5]
+    assert task.resumed_from_step == 2
+    assert np.allclose(task.result, sum(range(6)))
+    resumes = rep.events("resume")
+    assert len(resumes) == 1 and resumes[0].value == 2.0
+    # evidence also rides the terminal event's data dict (trace_summary path)
+    done = rep.events("done")[0]
+    assert done.data["resumed_from_step"] == 2
+
+
+def test_no_ckpt_root_means_no_context(tmp_path):
+    seen = []
+
+    def pay(comm):
+        seen.append(comm.checkpoint)
+        return 1
+
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01),
+                            ResourceManager(["d0"]), tick=0.01)
+    rep = sess.run([TaskDescription(name="t", ranks=1, fn=pay,
+                                    tags={"pipeline": "p"})], timeout=60)
+    assert rep.tasks[0].state == TaskState.DONE
+    assert seen == [None]
+    assert not rep.events("resume")
+
+
+def test_env_knob_binds_ckpt_root(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CKPT_DIR", str(tmp_path))
+
+    def pay(comm):
+        comm.checkpoint.save(0, {"x": np.ones(1)})
+        return 1
+
+    sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01),
+                            ResourceManager(["d0"]), tick=0.01)
+    rep = sess.run([TaskDescription(name="t", ranks=1, fn=pay,
+                                    tags={"pipeline": "p"})], timeout=60)
+    uid = rep.tasks[0].uid
+    assert latest_step(tmp_path / f"t{uid}" / "p0-of-1" / "a0") == 0
+
+
+def test_virtual_clock_resume_model(monkeypatch, tmp_path):
+    """Sim parity: with a checkpoint namespace bound and
+    ``ckpt_period_s`` set, retries of injected failures bank whole-period
+    progress and run only the remainder — same seed without the model
+    re-runs from scratch and takes at least as long."""
+    monkeypatch.setenv("REPRO_CKPT_DIR", str(tmp_path))
+    descs = [TaskDescription(name=f"t{i}", ranks=1, fn=None,
+                             duration_model=lambda r: 10.0, max_retries=8,
+                             tags={"pipeline": "p"}) for i in range(4)]
+    base = dict(noise=0.0, overhead_model=lambda r: 0.0,
+                failure_prob=0.4, seed=3)
+    cold = simulate(descs, 2, SimOptions(**base))
+    warm = simulate(descs, 2, SimOptions(**base, ckpt_period_s=2.0))
+    assert all(t.state == TaskState.DONE for t in warm.tasks)
+    # same seed -> same failure pattern; this seed produces retries
+    assert warm.n_retries == cold.n_retries > 0
+    resumes = warm.events("resume")
+    assert resumes and all(e.value > 0 for e in resumes)
+    assert not cold.events("resume")
+    assert warm.makespan < cold.makespan
+
+
+# ---------------------------------------------------------------------------
+# result cache (tier-1, thread executor)
+# ---------------------------------------------------------------------------
+# the cacheable payload lives in an importable helper module: this test
+# module is pickled BY VALUE (for the proc payloads below), and by-value
+# function pickles are not byte-stable across intervening imports — their
+# cache keys would drift.  By-reference pickles (importable module fns,
+# the realistic production shape) digest deterministically.
+from _ckpt_payloads import counted as _counted  # noqa: E402
+
+
+def _runs(marker):
+    return len(Path(marker).read_text().splitlines()) \
+        if Path(marker).exists() else 0
+
+
+def _cache_session(cache):
+    return SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01),
+                            ResourceManager(["d0"]), tick=0.01,
+                            result_cache=cache)
+
+
+def test_result_cache_hit_is_bit_identical_and_skips_recompute(tmp_path):
+    cache, marker = str(tmp_path / "cache"), str(tmp_path / "runs.txt")
+    desc = lambda: TaskDescription(name="c", ranks=1, fn=_counted,  # noqa: E731
+                                   args=(marker,), tags={"pipeline": "p"})
+    rep1 = _cache_session(cache).run([desc()], timeout=60)
+    assert rep1.tasks[0].state == TaskState.DONE
+    assert not rep1.tasks[0].cache_hit and _runs(marker) == 1
+    assert not rep1.events("cache_hit")
+
+    rep2 = _cache_session(cache).run([desc()], timeout=60)
+    t2 = rep2.tasks[0]
+    assert t2.state == TaskState.DONE and t2.cache_hit
+    assert _runs(marker) == 1                      # payload never re-ran
+    assert t2.result.tobytes() == rep1.tasks[0].result.tobytes()
+    assert t2.result.dtype == rep1.tasks[0].result.dtype
+    hits = rep2.events("cache_hit")
+    assert len(hits) == 1
+    assert rep2.events("done")[0].data.get("cache_hit") is True
+    # hits never dispatch: no executor launch for the cached task
+    assert not rep2.events("dispatch")
+
+    # different arguments -> different key -> recompute
+    rep3 = _cache_session(cache).run(
+        [TaskDescription(name="c", ranks=1, fn=_counted,
+                         args=(marker,), kwargs={"scale": 3.0},
+                         tags={"pipeline": "p"})], timeout=60)
+    assert not rep3.tasks[0].cache_hit and _runs(marker) == 2
+
+
+def test_result_cache_env_knob_and_zero_disables(tmp_path, monkeypatch):
+    cache, marker = str(tmp_path / "cache"), str(tmp_path / "runs.txt")
+    desc = lambda: TaskDescription(name="c", ranks=1, fn=_counted,  # noqa: E731
+                                   args=(marker,), tags={"pipeline": "p"})
+
+    def run_with_env(val):
+        monkeypatch.setenv("REPRO_RESULT_CACHE", val)
+        sess = SchedulerSession(ThreadExecutor(build_comm=False, tick=0.01),
+                                ResourceManager(["d0"]), tick=0.01)
+        return sess.run([desc()], timeout=60)
+
+    rep1 = run_with_env(cache)
+    assert _runs(marker) == 1 and not rep1.tasks[0].cache_hit
+    rep2 = run_with_env(cache)                     # env-bound cache hits
+    assert _runs(marker) == 1 and rep2.tasks[0].cache_hit
+    rep3 = run_with_env("0")                       # "0" reverts to recompute
+    assert _runs(marker) == 2 and not rep3.tasks[0].cache_hit
+    assert not rep3.events("cache_hit")
+
+
+def test_virtual_clock_never_caches(tmp_path):
+    """The sim is not wall-clock: identical descs must re-simulate, never
+    complete from a result cache written by a live run."""
+    from repro.core.executors import VirtualClockExecutor
+    ex = VirtualClockExecutor(SimOptions(noise=0.0,
+                                         overhead_model=lambda r: 0.0))
+    sess = SchedulerSession(ex, ResourceManager([0]),
+                            result_cache=str(tmp_path))
+    rep = sess.run([TaskDescription(name="t", ranks=1, fn=None,
+                                    duration_model=lambda r: 1.0,
+                                    tags={"pipeline": "p"})])
+    assert rep.tasks[0].state == TaskState.DONE
+    assert not rep.events("cache_hit")
+    assert not list(Path(tmp_path).glob("*.pkl"))
+
+
+# ---------------------------------------------------------------------------
+# process-executor integration: real SIGKILL, real resume
+# ---------------------------------------------------------------------------
+def _ckpt_steps(comm, n_steps=8, step_s=0.25):
+    c = comm.checkpoint
+    acc, start = np.zeros(1), 0
+    last = c.latest() if c is not None else None
+    if last is not None:
+        acc = c.restore(last, {"acc": acc})["acc"]
+        start = last + 1
+    executed = 0
+    for s in range(start, n_steps):
+        time.sleep(step_s)
+        acc = acc + s
+        c.save(s, {"acc": acc})
+        executed += 1
+    return {"executed": executed, "start": start, "acc": float(acc[0])}
+
+
+@needs_cloudpickle
+@pytest.mark.integration
+def test_proc_sigkill_midtask_retry_resumes(tmp_path):
+    """SIGKILL the worker running a stepped task partway through: the retry
+    on the surviving worker must restore the steps the dead attempt durably
+    committed and re-execute strictly fewer than the total."""
+    n_steps, step_s = 8, 0.25
+    with ProcessExecutor(n_workers=2, devices_per_worker=1,
+                         build_comm=False, tick=0.005,
+                         heartbeat_interval=0.2) as ex:
+        sess = SchedulerSession(ex, ex.resource_manager(), tick=0.02,
+                                ckpt_root=str(tmp_path))
+        sess.submit([TaskDescription(
+            name="steps", ranks=1, fn=_ckpt_steps,
+            kwargs={"n_steps": n_steps, "step_s": step_s},
+            max_retries=2, tags={"pipeline": "p"})])
+        # let a few steps commit, then kill the worker that owns the task
+        time.sleep(step_s * (n_steps // 2) + 0.4)
+        victim = sess.tasks[0].devices[0].worker
+        ex.kill_worker(victim, signal.SIGKILL)
+        rep = sess.drain(timeout=180).close()
+    task = rep.tasks[0]
+    assert task.state == TaskState.DONE
+    assert rep.n_retries >= 1
+    assert task.resumed_from_step > 0              # acceptance: resume evid.
+    assert task.result["start"] == task.resumed_from_step + 1
+    assert task.result["executed"] < n_steps       # strictly fewer re-runs
+    assert task.result["acc"] == float(sum(range(n_steps)))
+    resumes = rep.events("resume")
+    assert resumes and resumes[0].value == float(task.resumed_from_step)
